@@ -1,0 +1,48 @@
+"""Benchmark registry: one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract; full rows
+are written to benchmarks/out/*.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+# The collective/pipeline benches measure multi-device schedules; 8 virtual
+# CPU devices suffice (NOT the 512-device dry-run setting, which lives only
+# in launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    from benchmarks import paper_tables, system_benches
+
+    benches = [
+        ("table_6_1_fastest_configs", paper_tables.table_6_1),
+        ("table_6_2_memory", paper_tables.table_6_2),
+        ("table_6_3_small_clusters", paper_tables.table_6_3),
+        ("fig_4_scaling_ib", paper_tables.fig_4_scaling),
+        ("fig_8_scaling_ethernet", paper_tables.fig_8_ethernet),
+        ("fig_7_offload_intensities", paper_tables.fig_7_offload),
+        ("collective_schedule", system_benches.bench_collectives),
+        ("pipeline_bubble", system_benches.bench_pipeline_bubble),
+        ("pallas_kernels", system_benches.bench_kernels),
+        ("train_step_wallclock", system_benches.bench_train_step),
+    ]
+    outdir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(outdir, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        with open(os.path.join(outdir, name + ".json"), "w") as f:
+            json.dump({"rows": rows, "derived": derived}, f, indent=1,
+                      default=str)
+        dstr = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{int(us)},{dstr}")
+
+
+if __name__ == "__main__":
+    main()

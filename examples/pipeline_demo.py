@@ -1,0 +1,59 @@
+"""Modular vs naive pipeline parallelism side by side (paper §4).
+
+Runs both schedules on a 4-stage pipeline over 4 virtual devices, verifies
+they produce identical losses, and prints the bubble / traffic trade-off.
+
+    PYTHONPATH=src python examples/pipeline_demo.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import roofline
+from repro.core.pipeline import (make_pipeline_grad_fn, stage_param_specs,
+                                 to_stage_stack)
+from repro.core.schedules import PipeSpec
+from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig
+
+
+def main():
+    cfg = ModelConfig(name="pipe", arch_type="dense", num_layers=8,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32", param_dtype="float32")
+    mesh = make_test_mesh((4,), ("stage",))
+    M = 8
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (M, 2, 32), 0, 128)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1),
+             "mask": jnp.ones_like(toks)}
+    bspecs = {k: P(None, None, None) for k in batch}
+
+    print(f"{'schedule':>9s} {'loss':>9s} {'bubble':>7s} {'ticks':>6s} "
+          f"{'p2p bytes':>12s} {'flops':>12s}")
+    for sched in ("naive", "modular"):
+        spec = PipeSpec(n_stages=4, layers_per_stage=2, n_microbatches=M,
+                        schedule=sched)
+        pparams = dict({k: v for k, v in params.items() if k != "layers"},
+                       layers=to_stage_stack(params["layers"], spec))
+        specs = stage_param_specs(cfg, 1)
+        grad_fn = make_pipeline_grad_fn(cfg, AxisCtx(), spec)
+        fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+                           out_specs=(specs, {"loss": P(), "ntok": P()}))
+        grads, metrics = jax.jit(fn)(pparams, batch)
+        shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                              (pparams, batch))
+        c = roofline.analyze(fn, *shapes, mesh=mesh)
+        print(f"{sched:>9s} {float(metrics['loss']):9.4f} "
+              f"{spec.bubble_fraction:7.3f} {spec.total_outer_steps:6d} "
+              f"{c.coll_bytes.get('stage', 0):12,.0f} {c.dot_flops:12,.0f}")
+    print("\nsame loss, 1/K-th the bubble, ~K x the (cheap) p2p traffic —")
+    print("paper §4 in one table (K = layers per stage = 2 here).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: build a model, run layered-accumulation training for a few
+steps on CPU, and inspect the collective schedule that makes it special.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+
+from repro.core import roofline, stepfn
+from repro.core.accumulation import AccumConfig
+from repro.data.synthetic import DataConfig, make_batch
+from repro.launch.mesh import make_test_mesh
+from repro.models.common import ModelConfig
+from repro.optim.adam import AdamConfig, adam_init
+
+
+def main():
+    # a small llama-style model on a (data=2, model=2) mesh
+    cfg = ModelConfig(name="quickstart", arch_type="dense", num_layers=4,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=512, dtype="float32", param_dtype="float32")
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+
+    # the paper's improved method: layered accumulation + ZeRO-3 partition
+    acc = AccumConfig(method="layered", partitioned=True, n_microbatches=4)
+    step = stepfn.build_train_step(cfg, mesh, acc, AdamConfig(lr=1e-3),
+                                   donate=False)
+    storage = stepfn.init_storage(cfg, mesh, jax.random.PRNGKey(0),
+                                  partitioned=True)
+    opt = adam_init(storage)
+    data = DataConfig(vocab_size=512, seq_len=64, global_batch=8,
+                      n_microbatches=4)
+
+    print("training (layered + partitioned) ...")
+    for i in range(5):
+        batch = make_batch(data, i)
+        storage, opt, metrics = step(storage, opt, batch)
+        print(f"  step {i}: loss={float(metrics['loss']):.4f} "
+              f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+    # show the paper's claim: layered gathers each layer once per step
+    print("\ncollective schedule (per train step, from the jaxpr):")
+    for method in ("standard", "layered"):
+        acc2 = AccumConfig(method=method, partitioned=True, n_microbatches=4)
+        s2 = stepfn.build_train_step(cfg, mesh, acc2, AdamConfig(), donate=False)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (storage, opt, batch))
+        c = roofline.analyze(s2, *shapes, mesh=mesh)
+        gathers = sum(v for (ax, nm), v in c.coll_counts.items()
+                      if ax == "data" and "gather" in nm)
+        print(f"  {method:9s}: data-axis all_gathers={gathers:5.0f}  "
+              f"wire bytes={c.coll_bytes['data']:,.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""ZeRO-3 style training-state partition over the `data` mesh axis.
+
+Storage layout: every parameter leaf is stored as flat fp32 chunks
+``[..., n_data, chunk]`` (stacked layer leaves keep their leading ``L`` dim,
+and every leaf carries an ``n_model`` dim so the layout is uniform across
+model-sharded and model-replicated leaves):
+
+    partitioned leaf:  [L?, n_model, n_data, chunk]   spec (None?, 'model', 'data', None)
+
+Inside ``shard_map`` a device sees ``[L?, 1, 1, chunk]``.  The compute path
+restores the (bf16) model-local tensor with one ``all_gather`` over `data`
+and reduces gradients with one ``psum_scatter`` — the *frequency* of those
+two collectives is exactly what the paper's layered gradient accumulation
+changes (once per layer instead of once per layer × micro-batch).
+
+The paper's mixed-precision buffering maps to: fp32 master chunks (+ Adam
+moments in the same layout), bf16 gathered compute copies (cast before the
+all_gather so the wire traffic is 16-bit, like the paper's fp16 buffers).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+from repro.models.common import match_vma, pvary_missing  # noqa: F401  (re-export)
+
+
+def local_shape(global_shape: tuple[int, ...], spec: P, tp: int) -> tuple[int, ...]:
+    """Model-local shape of a leaf under tensor parallelism."""
+    dims = list(global_shape)
+    for i, ax in enumerate(spec):
+        if ax == "model":
+            assert dims[i] % tp == 0, (global_shape, spec, tp)
+            dims[i] //= tp
+    return tuple(dims)
+
+
+def chunk_size(local_numel: int, n_data: int) -> int:
+    return math.ceil(local_numel / n_data)
+
+
+# ---------------------------------------------------------------------------
+# Layout conversion (runs inside shard_map; operates on model-local shards)
+# ---------------------------------------------------------------------------
+def partition_local(leaf_local: jnp.ndarray, n_data: int, data_index,
+                    *, stacked: bool) -> jnp.ndarray:
+    """Model-local full leaf -> this device's fp32 chunk [L?, 1, 1, chunk]."""
+    x = leaf_local.astype(jnp.float32)
+    if stacked:
+        L = x.shape[0]
+        flat = x.reshape(L, -1)
+        c = chunk_size(flat.shape[1], n_data)
+        flat = jnp.pad(flat, ((0, 0), (0, c * n_data - flat.shape[1])))
+        flat = flat.reshape(L, n_data, c)
+        mine = lax.dynamic_slice_in_dim(flat, data_index, 1, axis=1)   # [L,1,c]
+        return mine[:, None]                                          # [L,1,1,c]
+    flat = x.reshape(-1)
+    c = chunk_size(flat.shape[0], n_data)
+    flat = jnp.pad(flat, (0, c * n_data - flat.shape[0])).reshape(n_data, c)
+    mine = lax.dynamic_slice_in_dim(flat, data_index, 1, axis=0)       # [1,c]
+    return mine[None]                                                  # [1,1,c]
+
+
+def gather_local(part: jnp.ndarray, axis_name, shape: tuple[int, ...],
+                 dtype, *, stacked: bool) -> jnp.ndarray:
+    """This device's chunk -> restored model-local tensor (cast *before* the
+    all_gather so the collective moves 16-bit data, as in the paper).
+
+    ``axis_name`` may be a tuple (e.g. ("pod", "data")) — the partition then
+    spans pods, the paper's slow-interconnect scenario (§8.3)."""
+    x = part.astype(dtype)
+    if stacked:
+        L, c = x.shape[0], x.shape[-1]
+        g = lax.all_gather(x[:, 0, 0], axis_name, axis=1)              # [L,n,c]
+        flat = g.reshape(L, -1)[:, :math.prod(shape[1:])]
+        return flat.reshape(shape)
+    g = lax.all_gather(x[0, 0], axis_name, axis=0)                     # [n,c]
+    return g.reshape(-1)[:math.prod(shape)].reshape(shape)
+
+
+def scatter_grad_local(grad_local: jnp.ndarray, axis_name, n_data: int,
+                       *, stacked: bool, model_axis: str | None = None,
+                       pod_axis: str | None = None,
+                       wire_dtype=jnp.float32) -> jnp.ndarray:
+    """Model-local full gradient -> reduced fp32 chunk [L?, 1, 1, chunk].
+
+    ``model_axis`` must be given for leaves *replicated* over the model axis
+    (their per-shard grads differ and need a psum).  ``pod_axis`` reduces the
+    slow cross-pod dimension (the partition lives within a pod).
+    ``wire_dtype``: bfloat16 halves the reduce-scatter wire bytes (grads are
+    then accumulated in bf16 on the wire, fp32 in storage).
+    """
+    g = grad_local.astype(wire_dtype)
+    if model_axis:
+        g = lax.psum(g, model_axis)
+    if pod_axis:
+        g = lax.psum(g, pod_axis)
+    if stacked:
+        L = g.shape[0]
+        flat = g.reshape(L, -1)
+        c = chunk_size(flat.shape[1], n_data)
+        flat = jnp.pad(flat, ((0, 0), (0, c * n_data - flat.shape[1])))
+        out = lax.psum_scatter(flat.reshape(L, n_data, c), axis_name,
+                               scatter_dimension=1, tiled=False)       # [L,c]
+        return out[:, None, None].astype(jnp.float32)
+    flat = g.reshape(-1)
+    c = chunk_size(flat.shape[0], n_data)
+    flat = jnp.pad(flat, (0, c * n_data - flat.shape[0])).reshape(n_data, c)
+    out = lax.psum_scatter(flat, axis_name, scatter_dimension=0, tiled=False)
+    return out[None, None].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+def is_stacked_path(path) -> bool:
+    return any(getattr(k, "key", None) == "layers" for k in path)
+
+
+EXPERT_LEAVES = ("w_up", "w_gate", "w_down")
+
+
+def is_expert_path(path) -> bool:
+    """MoE expert weight leaves (the expert-parallel resident set)."""
+    keys = [getattr(k, "key", None) for k in path]
+    return "moe" in keys and keys[-1] in EXPERT_LEAVES and "dense" not in keys
+
+
+def expert_resident_spec(path) -> P:
+    """Resident EP layout: expert dim over `data`, hidden dim over `model`.
+    w_up/w_gate: [L, E, D, F]; w_down: [L, E, F, D]."""
+    name = getattr(path[-1], "key", None)
+    if name == "w_down":
+        return P(None, "data", "model", None)
+    return P(None, "data", None, "model")
+
+
+def model_replicated(spec: P) -> bool:
+    return "model" not in tuple(spec)
+
+
+def partitioned_specs(specs: PyTree, *, span_pods: bool = False,
+                      expert_resident: bool = False) -> PyTree:
+    """Specs for the partitioned storage layout.
+
+    Input ``specs`` matches the parameter tree (stacked layer leaves already
+    carry their leading ``None``).  ``span_pods``: partition over
+    ("pod", "data") instead of "data" alone.  ``expert_resident``: MoE expert
+    weights stay in their compute layout (expert dim over `data`, hidden over
+    `model`) instead of flat ZeRO chunks — training-time expert parallelism
+    (no per-layer gather; tokens move via all_to_all instead).
+    """
+    part = ("pod", "data") if span_pods else "data"
+
+    def conv(path, spec):
+        if expert_resident and is_expert_path(path):
+            return expert_resident_spec(path)
+        m = None if model_replicated(spec) else "model"
+        if is_stacked_path(path):
+            return P(None, m, part, None)
+        return P(m, part, None)
+    return jax.tree_util.tree_map_with_path(conv, specs, is_leaf=_is_spec)
+
+
+def partitioned_shapes(template: PyTree, specs: PyTree, n_data: int,
+                       tp: int, *, expert_resident: bool = False) -> PyTree:
+    """Global ShapeDtypeStructs of the partitioned fp32 storage."""
+    def conv(path, leaf, spec):
+        if expert_resident and is_expert_path(path):
+            return jax.ShapeDtypeStruct(leaf.shape, jnp.float32)
+        stacked = is_stacked_path(path)
+        lshape = local_shape(leaf.shape, spec, tp)
+        n_model = 1 if model_replicated(spec) else tp
+        if stacked:
+            L = lshape[0]
+            c = chunk_size(math.prod(lshape[1:]), n_data)
+            shape = (L, n_model, n_data, c)
+        else:
+            c = chunk_size(math.prod(lshape), n_data)
+            shape = (n_model, n_data, c)
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+    return jax.tree_util.tree_map_with_path(conv, template, specs)

@@ -1,0 +1,403 @@
+"""Modular pipeline parallelism (paper §4) as an SPMD ppermute pipeline.
+
+The `stage` mesh axis holds the pipeline.  Layer parameters live stage-local
+as a ``[K, ...]`` stack (naive: contiguous slices; modular: round-robin
+columns of the global ``[L, ...]`` stack).  Activations ride a ring of
+``lax.ppermute`` ops driven by the tick schedules in core/schedules.py; idle
+(bubble) ticks compute on garbage and are masked — so the bubble shows up
+verbatim as wasted FLOPs in the roofline's useful-compute ratio, exactly
+like idle devices waste time on real hardware.
+
+Embedding / head run stage-replicated (their compute is marginal); only
+stage 0's embedding feeds the pipeline and only the stage that receives the
+final outputs (stage 0, via the ring wrap) evaluates the loss, so gradients
+stay correct with one psum over `stage` for the replicated leaves.
+
+Backward is plain ``jax.grad`` through the tick scan: the transpose of the
+ppermute ring is the reverse ring, giving the symmetric backward pipeline
+for free, with per-tick remat.
+
+Composition with the paper's other ideas: the modular schedule already
+processes all micro-batches of a layer consecutively (= layered gradient
+accumulation per stage); data parallelism composes by running this function
+under an additional `data` axis — the per-stage gradient psum then happens
+once per stage-layer, spread across the backward pass (fig. 1 bottom).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partition import pvary_missing
+from repro.core.schedules import PipeSpec
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig, apply_norm
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack <-> stage-stack layout
+# ---------------------------------------------------------------------------
+def to_stage_stack(layers: PyTree, spec: PipeSpec) -> PyTree:
+    """Global [L, ...] stacks -> [S, K, ...] (dim 0 shards over `stage`)."""
+    S, K = spec.n_stages, spec.layers_per_stage
+
+    def conv(x):
+        if spec.schedule == "naive":
+            return x.reshape(S, K, *x.shape[1:])
+        return x.reshape(K, S, *x.shape[1:]).swapaxes(0, 1)
+
+    return jax.tree.map(conv, layers)
+
+
+def from_stage_stack(stages: PyTree, spec: PipeSpec) -> PyTree:
+    S, K = spec.n_stages, spec.layers_per_stage
+
+    def conv(x):
+        if spec.schedule == "naive":
+            return x.reshape(S * K, *x.shape[2:])
+        return x.swapaxes(0, 1).reshape(S * K, *x.shape[2:])
+
+    return jax.tree.map(conv, stages)
+
+
+def stage_param_specs(cfg: ModelConfig, tp: int) -> PyTree:
+    """Specs for pipeline storage: layers get a leading 'stage' dim."""
+    base = T.param_specs(cfg, tp)
+    layers = jax.tree.map(lambda s: P("stage", *s), T.layer_specs(cfg, tp),
+                          is_leaf=lambda x: isinstance(x, P))
+    return dict({k: v for k, v in base.items() if k != "layers"}, layers=layers)
+
+
+# ---------------------------------------------------------------------------
+# The pipelined loss
+# ---------------------------------------------------------------------------
+def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
+                       stage_axis: str = "stage", remat: bool = True):
+    """Returns loss_fn(params, batch) -> (mean_loss, (nll_sum, ntok)).
+
+    Call INSIDE shard_map over a mesh containing `stage` (+ optionally
+    `data`/`model`).  params["layers"] is the stage-local [K, ...] stack;
+    batch leaves are [M, mb_local, ...] (replicated over `stage`).
+    """
+    windows, flags, _ = T.layer_tables(cfg)
+    S, K, M = spec.n_stages, spec.layers_per_stage, spec.n_microbatches
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def loss_fn(params, batch):
+        s = lax.axis_index(stage_axis)
+        shared = params.get("shared", {})
+
+        # ---- embed (stage-replicated compute; only stage 0's result enters)
+        def embed_one(_, mb):
+            return None, T.embed_inputs(cfg, params, mb, axis)
+
+        _, (X0, POS) = lax.scan(embed_one, None, batch)   # [M, mb, Sq, D]
+        on_stage0 = (s == 0)
+        vary_axes = (stage_axis, axis.data, axis.pod)
+        buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
+        buf_out = pvary_missing(jnp.zeros_like(X0), vary_axes)
+        pos = POS[0]                                       # identical per mb
+
+        def apply_one(lp, x, layer_id):
+            w = windows[layer_id]
+            fl = flags[layer_id]
+            x2, _aux = T.apply_layer(cfg, lp, shared, x, positions=pos,
+                                     window=w, shared_flag=fl, axis=axis)
+            return x2
+
+        # ---- tick body -----------------------------------------------------
+        if spec.schedule == "modular":
+            def tick(carry, t):
+                buf_in, buf_out = carry
+                busy, mb, r, layer_id = spec.modular_tick(t, s)
+                x = jax.tree.map(lambda b: b[mb], buf_in)
+                lp = jax.tree.map(lambda p: p[0, r], params["layers"])
+                y = apply_one(lp, x, layer_id)
+                y = jnp.where(busy, y, x)
+                recv = lax.ppermute(y, stage_axis, fwd_perm)
+                valid, mb_r, is_final = spec.modular_recv(t, s)
+                upd_in = jnp.where(valid & ~is_final, recv, buf_in[mb_r])
+                buf_in = buf_in.at[mb_r].set(upd_in)
+                upd_out = jnp.where(valid & is_final, recv, buf_out[mb_r])
+                buf_out = buf_out.at[mb_r].set(upd_out)
+                return (buf_in, buf_out), None
+        else:
+            def tick(carry, v):
+                buf_in, buf_out = carry
+                busy, mb = spec.naive_visit(v, s)
+                x = jax.tree.map(lambda b: b[mb], buf_in)
+
+                def layer_step(x, k):
+                    lp = jax.tree.map(lambda p: p[0, k], params["layers"])
+                    layer_id = s * K + k
+                    return apply_one(lp, x, layer_id), None
+
+                y, _ = lax.scan(layer_step, x, jnp.arange(K))
+                y = jnp.where(busy, y, x)
+                recv = lax.ppermute(y, stage_axis, fwd_perm)
+                valid, mb_r, is_final = spec.naive_recv(v, s)
+                upd_in = jnp.where(valid & ~is_final, recv, buf_in[mb_r])
+                buf_in = buf_in.at[mb_r].set(upd_in)
+                upd_out = jnp.where(valid & is_final, recv, buf_out[mb_r])
+                buf_out = buf_out.at[mb_r].set(upd_out)
+                return (buf_in, buf_out), None
+
+        if remat:
+            tick = jax.checkpoint(tick)
+        (buf_in, buf_out), _ = lax.scan(
+            tick, (buf_in, buf_out), jnp.arange(spec.total_outer_steps))
+
+        # ---- head: only the stage holding the outputs (stage 0) contributes
+        n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
+        if axis.data:
+            n_tok = lax.psum(n_tok, axis.data)
+        if axis.pod:
+            n_tok = lax.psum(n_tok, axis.pod)
+        inv_n = 1.0 / n_tok
+
+        def head_one(acc, xs):
+            mb, x = xs
+            h = apply_norm(cfg, params["final_norm"], x.astype(jnp.dtype(cfg.dtype)))
+            nll = T.head_loss(cfg, params, h, mb, axis)
+            return acc + nll, None
+
+        nll_sum, _ = lax.scan(head_one,
+                              pvary_missing(jnp.zeros((), jnp.float32),
+                                            vary_axes),
+                              (batch, buf_out))
+        nll_sum = jnp.where(on_stage0, nll_sum, 0.0)
+        # psum over `stage` both broadcasts the loss and kills the garbage
+        # head gradients of the non-owning stages.
+        nll_sum = lax.psum(nll_sum, stage_axis)
+        return nll_sum * inv_n, (nll_sum, n_tok)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-partitioned modular pipeline (the paper's full "improved" method)
+# ---------------------------------------------------------------------------
+def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
+                                   spec: PipeSpec, layer_template: PyTree, *,
+                                   stage_axis: str = "stage",
+                                   remat: bool = True):
+    """Modular pipeline with the stage-local layer stack ZeRO-partitioned
+    over `data` (paper §4: "it allows partitioning the training state in the
+    fastest 3d parallel settings").
+
+    Scheduling insight that keeps this SPMD-safe: in the modular schedule,
+    stage s uses its round-r weights for ticks [rM+s, rM+s+M); across stages
+    the windows overlap by at most one round.  So the tick scan is
+    restructured as an outer scan over rounds — every stage all_gathers its
+    round-r layer simultaneously (a uniform collective, once per layer per
+    pass = the layered-accumulation frequency) — with the previous round's
+    weights double-buffered in the carry (the paper's mixed buffering,
+    appendix C.2).  Backward-mode AD transposes the gathers into one
+    reduce-scatter per layer automatically.
+
+    params["layers"] leaves: [K, 1, n_data, chunk] fp32 storage chunks
+    (stage-local); requires schedule == "modular".
+    """
+    from repro.core import partition as zp
+
+    assert spec.schedule == "modular"
+    windows, flags, _ = T.layer_tables(cfg)
+    S, K, M = spec.n_stages, spec.layers_per_stage, spec.n_microbatches
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    dtype = jnp.dtype(cfg.dtype)
+
+    def gather_round(chunks_r):
+        """[1, n_data, chunk] leaves -> bf16 layer params (data-varying)."""
+        def g(tmpl, c):
+            full = zp.gather_local(c, axis.data, tmpl.shape, dtype,
+                                   stacked=False)
+            return pvary_missing(full, (axis.data, axis.pod))
+        return jax.tree.map(g, layer_template, chunks_r)
+
+    def loss_fn(params, batch):
+        s = lax.axis_index(stage_axis)
+        shared = params.get("shared", {})
+
+        def embed_one(_, mb):
+            return None, T.embed_inputs(cfg, params, mb, axis)
+
+        _, (X0, POS) = lax.scan(embed_one, None, batch)
+        on_stage0 = (s == 0)
+        vary_axes = (stage_axis, axis.data, axis.pod)
+        buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
+        buf_out = pvary_missing(jnp.zeros_like(X0), vary_axes)
+        pos = POS[0]
+
+        def apply_one(lp, x, layer_id):
+            x2, _aux = T.apply_layer(cfg, lp, shared, x, positions=pos,
+                                     window=windows[layer_id],
+                                     shared_flag=flags[layer_id], axis=axis)
+            return x2
+
+        def tick(carry, t):
+            buf_in, buf_out, w_prev, w_cur, r_cur = carry
+            busy, mb, r, layer_id = spec.modular_tick(t, s)
+            # this stage is either in round r_cur or still in r_cur - 1
+            lp = jax.tree.map(
+                lambda a, b: jnp.where(r == r_cur, a, b), w_cur, w_prev)
+            x = buf_in[mb]
+            y = apply_one(lp, x, layer_id)
+            y = jnp.where(busy, y, x)
+            recv = lax.ppermute(y, stage_axis, fwd_perm)
+            valid, mb_r, is_final = spec.modular_recv(t, s)
+            buf_in = buf_in.at[mb_r].set(
+                jnp.where(valid & ~is_final, recv, buf_in[mb_r]))
+            buf_out = buf_out.at[mb_r].set(
+                jnp.where(valid & is_final, recv, buf_out[mb_r]))
+            return (buf_in, buf_out, w_prev, w_cur, r_cur), None
+
+        if remat:
+            tick = jax.checkpoint(tick)
+
+        def round_step(carry, r):
+            buf_in, buf_out, w_cur = carry
+            rc = jnp.minimum(r, K - 1)
+            # local chunk leaves are [1(stage), K, 1(data), chunk]
+            w_next = gather_round(
+                jax.tree.map(lambda p: p[0, rc][None], params["layers"]))
+            ticks = r * M + jnp.arange(M)
+            (buf_in, buf_out, _, _, _), _ = lax.scan(
+                tick, (buf_in, buf_out, w_cur, w_next, rc), ticks)
+            return (buf_in, buf_out, w_next), None
+
+        w0 = jax.tree.map(lambda t: pvary_missing(
+            jnp.zeros(t.shape, dtype), vary_axes), layer_template)
+        n_rounds = (spec.total_outer_steps + M - 1) // M
+        (buf_in, buf_out, _), _ = lax.scan(
+            round_step, (buf_in, buf_out, w0),
+            jnp.arange(n_rounds))
+
+        n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
+        if axis.data:
+            n_tok = lax.psum(n_tok, axis.data)
+        if axis.pod:
+            n_tok = lax.psum(n_tok, axis.pod)
+
+        def head_one(acc, xs):
+            mb, x = xs
+            h = apply_norm(cfg, params["final_norm"],
+                           x.astype(jnp.dtype(cfg.dtype)))
+            return acc + T.head_loss(cfg, params, h, mb, axis), None
+
+        nll_sum, _ = lax.scan(
+            head_one, pvary_missing(jnp.zeros((), jnp.float32), vary_axes),
+            (batch, buf_out))
+        nll_sum = jnp.where(on_stage0, nll_sum, 0.0)
+        nll_sum = lax.psum(nll_sum, stage_axis)
+        return nll_sum / n_tok, (nll_sum, n_tok)
+
+    return loss_fn
+
+
+def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
+                                      spec: PipeSpec, layer_template: PyTree,
+                                      *, stage_axis: str = "stage",
+                                      remat: bool = True):
+    """grad_fn(params, batch) -> (grads, metrics) with ZeRO-chunked layers.
+
+    Layer gradients come out of AD already reduce-scattered (the transpose
+    of the per-round gather); only the small stage-replicated outer leaves
+    need the explicit data-axis psum.
+    """
+    loss_fn = make_partitioned_pipeline_loss(cfg, axis, spec, layer_template,
+                                             stage_axis=stage_axis,
+                                             remat=remat)
+    from repro.core import partition as zp
+
+    def grad_fn(params, batch):
+        varied = dict(
+            {k: jax.tree.map(lambda x: zp.pvary_missing(
+                x, (axis.data, axis.pod)), v)
+             for k, v in params.items() if k != "layers"},
+            layers=params["layers"])   # chunks: AD reduces via the gather
+        (loss, (nll, ntok)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(varied, batch)
+        if axis.data:
+            nll = lax.psum(nll, axis.data)
+        if axis.pod:
+            nll = lax.psum(nll, axis.pod)
+
+        def reduce(g):
+            g = g.astype(jnp.float32)
+            if axis.data:
+                g = lax.psum(g, axis.data)
+            if axis.pod:
+                g = lax.psum(g, axis.pod)
+            return g
+
+        grads = dict(
+            {k: jax.tree.map(reduce, v)
+             for k, v in grads.items() if k != "layers"},
+            layers=jax.tree.map(lambda g: g.astype(jnp.float32),
+                                grads["layers"]))
+        return grads, {"loss": nll / ntok, "ntok": ntok}
+
+    return grad_fn
+
+
+def to_partitioned_stage_stack(layers: PyTree, spec: PipeSpec,
+                               n_data: int) -> PyTree:
+    """Global [L, ...] stacks -> [S, K, n_data, chunk] fp32 ZeRO chunks
+    (storage layout for make_partitioned_pipeline_*; shard with
+    P("stage", None, "data", None))."""
+    import math as _math
+    staged = to_stage_stack(layers, spec)   # [S, K, ...]
+
+    def conv(x):
+        S_, K_ = x.shape[:2]
+        flat = x.astype(jnp.float32).reshape(S_, K_, -1)
+        c = _math.ceil(flat.shape[-1] / n_data)
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, c * n_data - flat.shape[-1])))
+        return flat.reshape(S_, K_, n_data, c)
+
+    return jax.tree.map(conv, staged)
+
+
+# ---------------------------------------------------------------------------
+# Gradient step (replicated storage)
+# ---------------------------------------------------------------------------
+def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
+                          stage_axis: str = "stage", remat: bool = True):
+    """grad_fn(params, batch) -> (grads, metrics), inside shard_map."""
+    loss_fn = make_pipeline_loss(cfg, axis, spec, stage_axis=stage_axis,
+                                 remat=remat)
+
+    def grad_fn(params, batch):
+        # differentiate w.r.t. data/pod-VARYING copies so AD yields local
+        # partial grads (the pcast must sit OUTSIDE the differentiated
+        # function — its transpose is a psum); the single explicit reduction
+        # below is then the only data-axis collective.
+        params = jax.tree.map(
+            lambda x: pvary_missing(x, (axis.data, axis.pod)), params)
+        (loss, (nll, ntok)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if axis.data:
+            nll = lax.psum(nll, axis.data)
+        if axis.pod:
+            nll = lax.psum(nll, axis.pod)
+
+        def reduce(g):
+            g = g.astype(jnp.float32)
+            if axis.data:
+                g = lax.psum(g, axis.data)
+            if axis.pod:
+                g = lax.psum(g, axis.pod)
+            return g
+
+        grads = jax.tree.map(reduce, grads)
+        metrics = {"loss": nll / ntok, "ntok": ntok}
+        return grads, metrics
+
+    return grad_fn

@@ -1,0 +1,106 @@
+"""Tick schedules for pipeline parallelism (paper §4).
+
+  naive (GPipe, contiguous layers)   stage s owns layers [s*K, (s+1)*K)
+      outer scan over V = M + S - 1 stage-visits; each visit applies the
+      stage's K layers to one micro-batch, then permutes ONCE.
+      bubble = (S-1) visits = K*(S-1) layer-ticks per stage.
+
+  modular (paper, round-robin)       stage s owns layers {s, s+S, ...}
+      scan over T = K*M + S - 1 layer-ticks; one layer per tick, permute
+      EVERY tick.  bubble = (S-1) layer-ticks per stage.
+
+The bubble ratio is K = d_l / n_l (the paper's reduction factor); the
+point-to-point traffic ratio is the inverse (modular permutes ~K x more
+bytes, eq. 10 vs 11).  The modular schedule processes all M micro-batches of
+one layer consecutively — it *is* layered gradient accumulation per stage,
+which is why the two methods compose.
+
+All index math takes traced ``t`` (scan counter) and ``s`` (axis_index).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeSpec:
+    n_stages: int
+    layers_per_stage: int
+    n_microbatches: int
+    schedule: str = "modular"        # "modular" | "naive"
+
+    def __post_init__(self):
+        assert self.schedule in ("modular", "naive")
+        if self.schedule == "modular":
+            assert self.n_microbatches >= self.n_stages, \
+                "modular pipeline needs n_mu >= n_stages"
+
+    @property
+    def num_layers(self) -> int:
+        return self.n_stages * self.layers_per_stage
+
+    @property
+    def total_outer_steps(self) -> int:
+        S, K, M = self.n_stages, self.layers_per_stage, self.n_microbatches
+        return K * M + S - 1 if self.schedule == "modular" else M + S - 1
+
+    @property
+    def layer_ticks_per_stage(self) -> int:
+        K = self.layers_per_stage
+        return self.total_outer_steps * (1 if self.schedule == "modular" else K)
+
+    @property
+    def bubble_layer_ticks(self) -> int:
+        S, K = self.n_stages, self.layers_per_stage
+        return (S - 1) if self.schedule == "modular" else K * (S - 1)
+
+    @property
+    def bubble_fraction(self) -> float:
+        return self.bubble_layer_ticks / self.layer_ticks_per_stage
+
+    @property
+    def permutes(self) -> int:
+        """Number of ppermute rounds (p2p transfers per stage)."""
+        return self.total_outer_steps
+
+    # ------------------------------------------------------------------
+    # modular: per layer-tick state
+    def modular_tick(self, t, s):
+        """(busy, mb, weight_idx r, global_layer) at tick t for stage s."""
+        S, K, M = self.n_stages, self.layers_per_stage, self.n_microbatches
+        n = t - s
+        busy = (n >= 0) & (n < K * M)
+        nc = jnp.clip(n, 0, K * M - 1)
+        r = nc // M
+        mb = nc % M
+        return busy, mb, r, r * S + s
+
+    def modular_recv(self, t, s):
+        """What arrives at stage s at the END of tick t: (valid, mb, is_final).
+        ``is_final``: last-layer output wrapping from stage S-1 to stage 0."""
+        S, K, M = self.n_stages, self.layers_per_stage, self.n_microbatches
+        prev = (s - 1) % S
+        n = t - prev
+        valid = (n >= 0) & (n < K * M)
+        nc = jnp.clip(n, 0, K * M - 1)
+        is_final = valid & (nc // M == K - 1) & (prev == S - 1)
+        return valid, nc % M, is_final
+
+    # ------------------------------------------------------------------
+    # naive: per stage-visit state
+    def naive_visit(self, v, s):
+        """(busy, mb) for visit v at stage s (the visit runs all K layers)."""
+        M = self.n_microbatches
+        n = v - s
+        busy = (n >= 0) & (n < M)
+        return busy, jnp.clip(n, 0, M - 1)
+
+    def naive_recv(self, v, s):
+        S, M = self.n_stages, self.n_microbatches
+        prev = (s - 1) % S
+        n = v - prev
+        valid = (n >= 0) & (n < M)
+        is_final = valid & (prev == S - 1)
+        return valid, jnp.clip(n, 0, M - 1), is_final

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced JAX ops, validating the logic the TPU target
+will compile.  On a real TPU backend ``interpret`` defaults off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: [B, S, Hq, D]; k, v: [B, S, Hkv, D] -> [B, S, Hq, D].
+
+    Pads S up to a block multiple (extra keys are causally masked out for the
+    real rows; padded query rows are dropped)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, Hq, D = q.shape
+    bq, bk = min(block_q, max(S, 16)), min(block_k, max(S, 16))
+    mult = max(bq, bk)
+    pad = (-S) % mult
+    if pad:
+        zq = jnp.zeros((B, pad, Hq, D), q.dtype)
+        zk = jnp.zeros((B, pad, k.shape[2], D), k.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk], axis=1)
+    out = _fa.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=bq, block_k=bk,
+                              interpret=interpret)
+    return out[:, :S] if pad else out
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=interpret)

@@ -1,0 +1,50 @@
+"""Fused RMSNorm Pallas kernel.
+
+One grid step normalises a ``(block_rows, D)`` tile held in VMEM: the mean
+square, rsqrt and scale multiply are fused into a single VMEM-resident pass
+(vs three HBM round-trips unfused).  D is expected to be a multiple of the
+128-lane layout (all assigned architectures satisfy this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """x: [..., D]; scale: [D] -> same shape/dtype as x."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, D)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,62 @@
+"""The analytical model vs the paper's own numbers (tables 6.1/6.2, §6)."""
+import pytest
+
+from repro.core import calculator as calc
+
+
+@pytest.fixture(scope="module")
+def rows():
+    return {r["method"]: r for r in calc.table_6_1(160)}
+
+
+def test_headline_speedup(rows):
+    """Improved 3d trains ~2x faster than baseline 3d (paper: 13 d -> 6.8 d)."""
+    base, impr = rows["3d-base"], rows["3d-impr"]
+    assert 12 <= base["time_days"] <= 14.5
+    assert 6.3 <= impr["time_days"] <= 7.5
+    assert 1.7 <= base["time_days"] / impr["time_days"] <= 2.2
+
+
+def test_configs_match_paper(rows):
+    assert rows["3d-impr"]["n_gpu"] == 38640
+    assert rows["3d-impr"]["n_mu"] == 5
+    assert rows["3d-base"]["n_b"] == 14
+    assert rows["3d-base"]["n_mu"] == 172
+    assert rows["pipe-base"]["n_mu"] == 201
+    assert rows["tensor-part"]["n_gpu"] == 7728
+    assert abs(rows["3d-impr"]["efficiency"] - 0.88) < 0.02
+    assert abs(rows["3d-base"]["efficiency"] - 0.48) < 0.01
+
+
+def test_memory_matches_paper(rows):
+    """Table 6.2 spot checks (GiB)."""
+    assert abs(rows["3d-impr"]["mem_offloadable"] - 1.58) < 0.05
+    assert abs(rows["3d-impr"]["mem_non_offloadable"] - 3.14) < 0.05
+    assert abs(rows["tensor-part"]["mem_offloadable"] - 7.92) < 0.1
+    assert abs(rows["pipe-impr"]["mem_state"] - 5.82) < 0.1
+    assert abs(rows["none"]["mem_buffers"] - 43.9) < 0.5
+    total = rows["3d-impr"]["mem_offloadable"] + rows["3d-impr"]["mem_non_offloadable"]
+    assert abs(total - 4.72) < 0.1      # "17x below an 80 GB A100"
+
+
+def test_single_gpu_time(rows):
+    assert 600 <= rows["none"]["time_days"] / 365 <= 660   # paper: 630 y
+
+
+def test_no_memory_wall():
+    """Paper fig. 6: the memory-to-compute ratio FALLS with model size —
+    memory is never the binding constraint at scale."""
+    hw = calc.Hardware()
+    ratios = []
+    for x in (64, 108, 160, 226, 320):
+        m = calc.XModel(x)
+        c = calc.fastest(m, hw, method="improved")
+        mem = (c.memory["offloadable"] + c.memory["non_offloadable"]) * calc.GIB
+        ratios.append(mem / (m.step_flops(c.b) / c.n_gpu))
+    assert all(a > b for a, b in zip(ratios, ratios[1:])), ratios
+
+
+def test_offload_intensities():
+    out = calc.offload_intensities(160)
+    assert out["state_streams_to_hdd"]          # §8.2: HDD suffices for state
+    assert out["ckpt_streams_to_nvme"]

@@ -1,0 +1,97 @@
+"""MoE: dispatch equivalence (dense vs a2a), capacity semantics, router."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_mod
+from repro.models.common import AxisCtx, ModelConfig
+
+CFG = ModelConfig(name="m", arch_type="moe", num_layers=1, d_model=32,
+                  num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                  num_experts=4, experts_per_token=2, dtype="float32",
+                  param_dtype="float32")
+
+
+def test_a2a_matches_dense_dispatch(mesh22):
+    key = jax.random.PRNGKey(0)
+    params = moe_mod.init_moe(CFG, key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 32))
+    ref, aux_ref = moe_mod.apply_moe(CFG, params, x, AxisCtx(),
+                                     capacity_factor=8.0)
+    specs = {"router": P(None, None), "w_up": P("data", None, "model"),
+             "w_gate": P("data", None, "model"),
+             "w_down": P("data", "model", None)}
+    axis = AxisCtx(data="data", model="model", expert="data", tp=2, dp=2,
+                   ndata=2)
+
+    def f(p, x):
+        y, _ = moe_mod.apply_moe(CFG, p, x, axis, capacity_factor=8.0)
+        return y
+
+    fn = jax.jit(jax.shard_map(f, mesh=mesh22,
+                               in_specs=(specs, P("data", None, None)),
+                               out_specs=P("data", None, None)))
+    out = fn(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_capacity_drops_tokens():
+    """With tiny capacity some assignments drop; output stays finite and
+    within the span of expert outputs."""
+    key = jax.random.PRNGKey(1)
+    params = moe_mod.init_moe(CFG, key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, 32))
+    y_small, _ = moe_mod.apply_moe(CFG, params, x, AxisCtx(),
+                                   capacity_factor=0.25)
+    y_big, _ = moe_mod.apply_moe(CFG, params, x, AxisCtx(),
+                                 capacity_factor=8.0)
+    assert jnp.all(jnp.isfinite(y_small))
+    # dropping changes outputs; big capacity keeps more
+    assert float(jnp.mean(jnp.abs(y_small))) <= float(jnp.mean(jnp.abs(y_big))) + 1e-3
+
+
+def test_router_weights_normalised():
+    key = jax.random.PRNGKey(2)
+    params = moe_mod.init_moe(CFG, key)
+    x = jax.random.normal(key, (16, 32))
+    w, ids, aux = moe_mod._router(CFG, params, x)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-5)
+    assert float(aux) >= 1.0 - 1e-3   # >= 1 by Cauchy-Schwarz, = 1 if balanced
+    assert jnp.all((ids >= 0) & (ids < CFG.num_experts))
+
+
+def test_expert_parallel_training_identical(mesh22):
+    """Resident-EP training (a2a) computes the same losses as ZeRO-gathered
+    training (the §Perf 'refuted for wire-bytes but exact' variant)."""
+    import numpy as np
+    from repro.core import stepfn
+    from repro.core.accumulation import AccumConfig
+    from repro.data.synthetic import DataConfig, make_batch
+    from repro.optim.adam import AdamConfig, adam_init
+
+    cfg = ModelConfig(name="ep", arch_type="moe", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=2, experts_per_token=2, dtype="float32",
+                      param_dtype="float32")
+    data = DataConfig(vocab_size=64, seq_len=16, global_batch=8,
+                      n_microbatches=2, noise=0.02)
+    losses = {}
+    for ep in (False, True):
+        acc = AccumConfig(method="layered", partitioned=True,
+                          n_microbatches=2, expert_parallel=ep)
+        step = stepfn.build_train_step(cfg, mesh22, acc,
+                                       AdamConfig(lr=3e-3, warmup_steps=1,
+                                                  decay_steps=100),
+                                       donate=False)
+        storage = stepfn.init_storage(cfg, mesh22, jax.random.PRNGKey(0),
+                                      partitioned=True, expert_resident=ep)
+        opt = adam_init(storage)
+        ls = []
+        for i in range(5):
+            storage, opt, m = step(storage, opt, make_batch(data, i))
+            ls.append(float(m["loss"]))
+        losses[ep] = ls
+    np.testing.assert_allclose(losses[False], losses[True], rtol=2e-4)

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedules import PipeSpec
+from repro.models.common import ModelConfig, apply_rope, softcap
+from repro.models.ssm import linear_attention_chunked
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@settings(**SET)
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 12))
+def test_pipeline_schedule_covers_all_work(S, K, M_extra):
+    """Every (layer, micro-batch) pair is processed exactly once, in a valid
+    order, by the modular schedule."""
+    M = S + M_extra
+    spec = PipeSpec(n_stages=S, layers_per_stage=K, n_microbatches=M,
+                    schedule="modular")
+    seen = {}
+    for t in range(spec.total_outer_steps):
+        for s in range(S):
+            busy, mb, r, layer = (np.asarray(v) for v in spec.modular_tick(
+                jnp.asarray(t), jnp.asarray(s)))
+            if busy:
+                key = (int(layer), int(mb))
+                assert key not in seen, f"duplicate {key}"
+                seen[key] = t
+    assert len(seen) == S * K * M
+    # causality: layer l of mb m happens after layer l-1 of mb m
+    for (layer, mb), t in seen.items():
+        if layer > 0:
+            assert seen[(layer - 1, mb)] < t
+
+
+@settings(**SET)
+@given(st.integers(2, 5), st.integers(1, 3), st.integers(0, 8))
+def test_naive_schedule_covers_all_visits(S, K, M_extra):
+    M = 1 + M_extra
+    spec = PipeSpec(n_stages=S, layers_per_stage=K, n_microbatches=M,
+                    schedule="naive")
+    seen = set()
+    for v in range(spec.total_outer_steps):
+        for s in range(S):
+            busy, mb = (np.asarray(x) for x in spec.naive_visit(
+                jnp.asarray(v), jnp.asarray(s)))
+            if busy:
+                assert (int(s), int(mb)) not in seen
+                seen.add((int(s), int(mb)))
+    assert len(seen) == S * M
+
+
+@settings(**SET)
+@given(st.integers(1, 64), st.floats(1.0, 100.0))
+def test_softcap_bounds(n, cap):
+    x = jnp.linspace(-1e4, 1e4, n)
+    y = softcap(x, cap)
+    assert float(jnp.max(jnp.abs(y))) <= cap + 1e-3
+    # monotone
+    assert bool(jnp.all(jnp.diff(y) >= -1e-6))
+
+
+@settings(**SET)
+@given(st.integers(2, 16), st.integers(1, 50))
+def test_rope_preserves_norm(half_dim, pos):
+    key = jax.random.PRNGKey(half_dim)
+    x = jax.random.normal(key, (1, 1, 1, 2 * half_dim))
+    p = jnp.full((1, 1), pos, jnp.int32)
+    y = apply_rope(x, p, 10_000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+@settings(**SET)
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(2, 4),
+       st.sampled_from([4, 8]))
+def test_linear_recurrence_additivity(B, S, H, dk):
+    """The recurrence is linear in v: engine(v1+v2) == engine(v1)+engine(v2)."""
+    key = jax.random.PRNGKey(B * S)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk))
+    k = jax.random.normal(ks[1], (B, S, H, dk))
+    v1 = jax.random.normal(ks[2], (B, S, H, dk))
+    v2 = jax.random.normal(ks[3], (B, S, H, dk))
+    ld = -jnp.abs(jax.random.normal(ks[4], (B, S, H, dk)))
+    S0 = jnp.zeros((B, H, dk, dk))
+    o12, s12 = linear_attention_chunked(q, k, v1 + v2, ld, S0, chunk=8)
+    o1, s1 = linear_attention_chunked(q, k, v1, ld, S0, chunk=8)
+    o2, s2 = linear_attention_chunked(q, k, v2, ld, S0, chunk=8)
+    np.testing.assert_allclose(np.asarray(o12), np.asarray(o1 + o2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s12), np.asarray(s1 + s2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(**SET)
+@given(st.integers(1, 4))
+def test_grad_accum_linearity(seed):
+    """Mean-normalised loss gradients are invariant to the micro-batch split."""
+    from repro.core import stepfn
+    from repro.core.accumulation import AccumConfig, make_grad_fn
+    from repro.models import transformer as T
+    from jax.sharding import PartitionSpec as P
+
+    cfg = ModelConfig(name="g", arch_type="dense", num_layers=2, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=32,
+                      dtype="float32", param_dtype="float32")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    axis = stepfn.axis_ctx(mesh)
+    tmpl = stepfn.full_template(cfg)
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (4, 2, 8), 0, 32)
+    batch4 = {"tokens": toks, "labels": toks, "mask": jnp.ones_like(toks)}
+    batch2 = {k: v.reshape(2, 4, 8) for k, v in batch4.items()}
+    storage = stepfn.init_storage(cfg, mesh, key, partitioned=False)
+    grads = {}
+    for M, batch in ((4, batch4), (2, batch2)):
+        acc = AccumConfig(method="layered", partitioned=False, n_microbatches=M)
+        fn = jax.shard_map(make_grad_fn(cfg, axis, acc, tmpl), mesh=mesh,
+                           in_specs=(stepfn.storage_specs(cfg, axis, False),
+                                     stepfn.batch_specs(cfg, axis,
+                                                        microbatched=True)),
+                           out_specs=(stepfn.storage_specs(cfg, axis, False),
+                                      {"loss": P(), "ntok": P(), "aux": P()}))
+        grads[M], _ = jax.jit(fn)(storage, batch)
+    for (pa, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(grads[4]),
+                               jax.tree_util.tree_leaves_with_path(grads[2])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5, err_msg=str(pa))

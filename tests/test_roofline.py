@@ -1,0 +1,45 @@
+"""The jaxpr cost walker: known-graph FLOPs, scan multipliers, collectives."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import roofline
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    c = roofline.analyze(f, jnp.zeros((8, 16)), jnp.zeros((16, 32)))
+    assert c.dot_flops == 2 * 8 * 16 * 32
+
+
+def test_scan_multiplies():
+    def f(x, w):
+        def body(x, wl):
+            return jnp.tanh(x @ wl), None
+        x, _ = lax.scan(body, x, w)
+        return x
+    c = roofline.analyze(f, jnp.zeros((4, 8)), jnp.zeros((5, 8, 8)))
+    assert c.dot_flops == 5 * 2 * 4 * 8 * 8
+
+
+def test_collective_axes_and_wire_bytes(mesh22):
+    def f(x):
+        g = lax.all_gather(x, "data", axis=0, tiled=True)
+        s = lax.psum(g, "model")
+        return s
+    sf = jax.shard_map(f, mesh=mesh22, in_specs=P("data", None),
+                       out_specs=P(None, None), check_vma=False)
+    c = roofline.analyze(sf, jnp.zeros((4, 8)), mesh=mesh22)
+    assert c.coll_bytes["data"] > 0
+    assert c.coll_bytes["model"] > 0
+    # psum counts 2(n-1)/n * bytes: [4,8] f32 = 128B -> 128
+    assert abs(c.coll_bytes["model"] - 2 * 0.5 * 4 * 8 * 4) < 1e-6
+
+
+def test_dominant_term():
+    c = roofline.Costs(dot_flops=1e15, hbm_bytes=1.0)
+    assert c.dominant() == "compute"
+    c = roofline.Costs(dot_flops=1.0, hbm_bytes=1e13)
+    assert c.dominant() == "memory"
