@@ -1,10 +1,12 @@
 """Benchmark registry: one function per paper table/figure + system benches.
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract; full rows
-are written to benchmarks/out/*.json.
+are written to benchmarks/out/*.json (``--smoke`` additionally writes
+``BENCH_<name>.json`` copies — the CI artifact naming contract).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -14,8 +16,21 @@ import time
 # in launch/dryrun.py).
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+# Trace-only benches (jaxpr accounting, no XLA compile of big programs):
+# cheap enough for a per-commit CI smoke job, yet they pin the paper's two
+# headline mechanisms (collective-traffic reduction, bubble fraction).
+SMOKE = ("collective_schedule", "pipeline_bubble")
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest configuration: trace-only benches, "
+                         "results also saved as BENCH_<name>.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args = ap.parse_args()
+
     from benchmarks import paper_tables, system_benches
 
     benches = [
@@ -30,6 +45,11 @@ def main() -> None:
         ("pallas_kernels", system_benches.bench_kernels),
         ("train_step_wallclock", system_benches.bench_train_step),
     ]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",")}
+        benches = [(n, f) for n, f in benches if n in wanted]
+    elif args.smoke:
+        benches = [(n, f) for n, f in benches if n in SMOKE]
     outdir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(outdir, exist_ok=True)
     print("name,us_per_call,derived")
@@ -37,9 +57,12 @@ def main() -> None:
         t0 = time.perf_counter()
         rows, derived = fn()
         us = (time.perf_counter() - t0) * 1e6
+        payload = {"rows": rows, "derived": derived}
         with open(os.path.join(outdir, name + ".json"), "w") as f:
-            json.dump({"rows": rows, "derived": derived}, f, indent=1,
-                      default=str)
+            json.dump(payload, f, indent=1, default=str)
+        if args.smoke:
+            with open(os.path.join(outdir, f"BENCH_{name}.json"), "w") as f:
+                json.dump(payload, f, indent=1, default=str)
         dstr = ";".join(f"{k}={v}" for k, v in derived.items())
         print(f"{name},{int(us)},{dstr}")
 

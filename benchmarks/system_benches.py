@@ -7,10 +7,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def bench_collectives():
@@ -46,7 +47,7 @@ def bench_collectives():
             else:
                 shapes = jax.tree.map(
                     lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tmpl)
-            fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(sspecs, bspecs),
+            fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(sspecs, bspecs),
                                out_specs=(sspecs, {"loss": P(), "ntok": P(),
                                                    "aux": P()}))
             t0 = time.perf_counter()
@@ -86,7 +87,7 @@ def bench_pipeline_bubble():
                         schedule=sched)
         specs = stage_param_specs(cfg, 1)
         grad_fn = make_pipeline_grad_fn(cfg, AxisCtx(), spec)
-        fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+        fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
                            out_specs=(specs, {"loss": P(), "ntok": P()}))
         shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                               dict({k: v for k, v in params.items()

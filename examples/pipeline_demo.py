@@ -19,6 +19,7 @@ from repro.core.schedules import PipeSpec
 from repro.launch.mesh import make_test_mesh
 from repro.models import transformer as T
 from repro.models.common import AxisCtx, ModelConfig
+from repro import compat
 
 
 def main():
@@ -42,7 +43,7 @@ def main():
                        layers=to_stage_stack(params["layers"], spec))
         specs = stage_param_specs(cfg, 1)
         grad_fn = make_pipeline_grad_fn(cfg, AxisCtx(), spec)
-        fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+        fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
                            out_specs=(specs, {"loss": P(), "ntok": P()}))
         grads, metrics = jax.jit(fn)(pparams, batch)
         shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),

@@ -34,7 +34,7 @@ def _is_spec(x) -> bool:
     return isinstance(x, P)
 
 
-from repro.models.common import match_vma, pvary_missing  # noqa: F401  (re-export)
+from repro.compat import match_vma, pvary_missing  # noqa: F401  (re-export)
 
 
 def local_shape(global_shape: tuple[int, ...], spec: P, tp: int) -> tuple[int, ...]:

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.partition import pvary_missing
+from repro import compat
+from repro.compat import pvary_missing
 from repro.core.schedules import PipeSpec
 from repro.models import transformer as T
 from repro.models.common import AxisCtx, ModelConfig, apply_norm
@@ -98,7 +99,7 @@ def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
         def embed_one(_, mb):
             return None, T.embed_inputs(cfg, params, mb, axis)
 
-        _, (X0, POS) = lax.scan(embed_one, None, batch)   # [M, mb, Sq, D]
+        _, (X0, POS) = compat.scan(embed_one, None, batch)   # [M, mb, Sq, D]
         on_stage0 = (s == 0)
         vary_axes = (stage_axis, axis.data, axis.pod)
         buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
@@ -139,7 +140,7 @@ def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
                     layer_id = s * K + k
                     return apply_one(lp, x, layer_id), None
 
-                y, _ = lax.scan(layer_step, x, jnp.arange(K))
+                y, _ = compat.scan(layer_step, x, jnp.arange(K))
                 y = jnp.where(busy, y, x)
                 recv = lax.ppermute(y, stage_axis, fwd_perm)
                 valid, mb_r, is_final = spec.naive_recv(v, s)
@@ -150,8 +151,8 @@ def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
                 return (buf_in, buf_out), None
 
         if remat:
-            tick = jax.checkpoint(tick)
-        (buf_in, buf_out), _ = lax.scan(
+            tick = compat.checkpoint(tick)
+        (buf_in, buf_out), _ = compat.scan(
             tick, (buf_in, buf_out), jnp.arange(spec.total_outer_steps))
 
         # ---- head: only the stage holding the outputs (stage 0) contributes
@@ -168,7 +169,7 @@ def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
             nll = T.head_loss(cfg, params, h, mb, axis)
             return acc + nll, None
 
-        nll_sum, _ = lax.scan(head_one,
+        nll_sum, _ = compat.scan(head_one,
                               pvary_missing(jnp.zeros((), jnp.float32),
                                             vary_axes),
                               (batch, buf_out))
@@ -228,7 +229,7 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
         def embed_one(_, mb):
             return None, T.embed_inputs(cfg, params, mb, axis)
 
-        _, (X0, POS) = lax.scan(embed_one, None, batch)
+        _, (X0, POS) = compat.scan(embed_one, None, batch)
         on_stage0 = (s == 0)
         vary_axes = (stage_axis, axis.data, axis.pod)
         buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
@@ -259,7 +260,7 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
             return (buf_in, buf_out, w_prev, w_cur, r_cur), None
 
         if remat:
-            tick = jax.checkpoint(tick)
+            tick = compat.checkpoint(tick)
 
         def round_step(carry, r):
             buf_in, buf_out, w_cur = carry
@@ -268,14 +269,14 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
             w_next = gather_round(
                 jax.tree.map(lambda p: p[0, rc][None], params["layers"]))
             ticks = r * M + jnp.arange(M)
-            (buf_in, buf_out, _, _, _), _ = lax.scan(
+            (buf_in, buf_out, _, _, _), _ = compat.scan(
                 tick, (buf_in, buf_out, w_cur, w_next, rc), ticks)
             return (buf_in, buf_out, w_next), None
 
         w0 = jax.tree.map(lambda t: pvary_missing(
             jnp.zeros(t.shape, dtype), vary_axes), layer_template)
         n_rounds = (spec.total_outer_steps + M - 1) // M
-        (buf_in, buf_out, _), _ = lax.scan(
+        (buf_in, buf_out, _), _ = compat.scan(
             round_step, (buf_in, buf_out, w0),
             jnp.arange(n_rounds))
 
@@ -291,7 +292,7 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
                            x.astype(jnp.dtype(cfg.dtype)))
             return acc + T.head_loss(cfg, params, h, mb, axis), None
 
-        nll_sum, _ = lax.scan(
+        nll_sum, _ = compat.scan(
             head_one, pvary_missing(jnp.zeros((), jnp.float32), vary_axes),
             (batch, buf_out))
         nll_sum = jnp.where(on_stage0, nll_sum, 0.0)
@@ -324,6 +325,8 @@ def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
             layers=params["layers"])   # chunks: AD reduces via the gather
         (loss, (nll, ntok)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(varied, batch)
+        from repro.core.accumulation import _complete_block_replicated_grads
+        grads = _complete_block_replicated_grads(grads, axis)
         if axis.data:
             nll = lax.psum(nll, axis.data)
         if axis.pod:
@@ -383,6 +386,8 @@ def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
             lambda x: pvary_missing(x, (axis.data, axis.pod)), params)
         (loss, (nll, ntok)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch)
+        from repro.core.accumulation import _complete_block_replicated_grads
+        grads = _complete_block_replicated_grads(grads, axis)
         if axis.data:
             nll = lax.psum(nll, axis.data)
         if axis.pod:

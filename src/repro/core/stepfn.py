@@ -16,6 +16,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import partition as zp
 from repro.core.accumulation import AccumConfig, make_grad_fn, split_tree
 from repro.models import transformer as T
@@ -114,7 +115,7 @@ def init_storage(cfg: ModelConfig, mesh: Mesh, key, *, partitioned: bool,
 
     out_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                              is_leaf=lambda x: isinstance(x, P))
-    fn = jax.shard_map(convert, mesh=mesh, in_specs=(fspecs,), out_specs=pspecs)
+    fn = compat.shard_map(convert, mesh=mesh, in_specs=(fspecs,), out_specs=pspecs)
     return jax.jit(fn, out_shardings=out_shard)(params)
 
 
@@ -134,7 +135,7 @@ def gather_params(cfg: ModelConfig, mesh: Mesh, storage: PyTree) -> PyTree:
 
     # values are replicated after the all_gather but stay typed "varying";
     # this is pure data movement (no AD), so the vma check is waived.
-    fn = jax.shard_map(gather, mesh=mesh, in_specs=(pspecs,), out_specs=fspecs,
+    fn = compat.shard_map(gather, mesh=mesh, in_specs=(pspecs,), out_specs=fspecs,
                        check_vma=False)
     return jax.jit(fn)(storage)
 
@@ -201,7 +202,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, acc: AccumConfig,
         metrics = dict(metrics, **om)
         return storage, opt, metrics
 
-    fn = jax.shard_map(step, mesh=mesh,
+    fn = compat.shard_map(step, mesh=mesh,
                        in_specs=(sspecs, ospecs, bspecs),
                        out_specs=(sspecs, ospecs, mspecs))
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
@@ -284,7 +285,7 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, *, seq_shard: bool = False):
     def serve(params, cache, tokens):
         return T.decode_step(cfg, params, cache, tokens, axis)
 
-    fn = jax.shard_map(serve, mesh=mesh,
+    fn = compat.shard_map(serve, mesh=mesh,
                        in_specs=(fspecs, cspecs, tok_spec),
                        out_specs=(logit_spec, cspecs))
     return jax.jit(fn, donate_argnums=(1,))
@@ -307,7 +308,7 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh):
     def prefill(params, cache, batch):
         return T.prefill_step(cfg, params, cache, batch, axis)
 
-    fn = jax.shard_map(prefill, mesh=mesh,
+    fn = compat.shard_map(prefill, mesh=mesh,
                        in_specs=(fspecs, cspecs, bspecs),
                        out_specs=(logit_spec, cspecs))
     return jax.jit(fn, donate_argnums=(1,))
@@ -376,7 +377,7 @@ def build_fused_train_step(cfg: ModelConfig, mesh: Mesh, acc: AccumConfig,
         metrics = dict(metrics, lr=lr, grad_norm=jnp.zeros(()))
         return new_storage, new_opt, metrics
 
-    fn = jax.shard_map(step, mesh=mesh,
+    fn = compat.shard_map(step, mesh=mesh,
                        in_specs=(sspecs, ospecs, bspecs),
                        out_specs=(sspecs, ospecs, mspecs))
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ())

@@ -16,6 +16,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat                       # noqa: E402
 from repro import configs                      # noqa: E402
 from repro.core import partition as zp         # noqa: E402
 from repro.core import roofline, stepfn        # noqa: E402
@@ -163,8 +164,7 @@ def run_one(arch: str, shape: str, *, multi_pod: bool, method: str = "layered",
         # same 256-chip pod
         d, m = (int(v) for v in mesh_shape.split("x"))
         assert d * m == 256, (d, m)
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((d, m), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     axis = stepfn.axis_ctx(mesh)

@@ -7,16 +7,14 @@ import, and tests/benches must keep seeing 1 device.
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape, axes):
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return compat.make_mesh(shape, axes)

@@ -16,6 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import (HAS_VMA, match_vma, pvary_missing,  # noqa: F401
+                          tp_entry_mark)
+
 PyTree = Any
 
 
@@ -57,21 +60,8 @@ class AxisCtx:
         return n
 
 
-def pvary_missing(x, axes):
-    """Mark ``x`` varying over ``axes`` (no-op for axes already varying or
-    absent).  Needed wherever fresh zeros meet mesh-varying values in a scan
-    carry under shard_map's vma typing."""
-    axes = tuple(a for a in axes if a)
-    if not axes:
-        return x
-    have = jax.typeof(x).vma
-    need = tuple(a for a in axes if a not in have)
-    return lax.pcast(x, need, to="varying") if need else x
-
-
-def match_vma(value, ref):
-    """Give ``value`` the same varying-manual-axes typing as ``ref``."""
-    return pvary_missing(value, tuple(jax.typeof(ref).vma))
+# pvary_missing / match_vma live in repro.compat (they are JAX-version
+# dependent); re-exported above for the existing call sites.
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +356,7 @@ def lm_head_loss(cfg: ModelConfig, head: jnp.ndarray, x: jnp.ndarray,
     Returns the summed (not averaged) loss; the caller normalises so that
     micro-batch accumulation stays linear.
     """
+    x = tp_entry_mark(x, axis.model)
     logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype)).astype(jnp.float32)
     logits = softcap(logits, cfg.final_logit_softcap)
     if axis.model:
@@ -387,10 +378,12 @@ def lm_head_loss(cfg: ModelConfig, head: jnp.ndarray, x: jnp.ndarray,
         picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     nll = (m + jnp.log(se) - picked) * mask.astype(jnp.float32)
     total = jnp.sum(nll)
-    if axis.model:
+    if axis.model and HAS_VMA:
         # value is already replicated across `model` (the stabilizer came from
         # an all_gather); this scalar psum/size only restores the invariant
-        # typing for the vma machinery.
+        # typing for the vma machinery.  Pre-vma JAX has no such typing to
+        # restore, and there the pair would misweight the backward (the
+        # auto-pvary whose transpose rebalances it is a vma-era insertion).
         total = lax.psum(total, axis.model) / lax.psum(1.0, axis.model)
     return total
 
@@ -398,6 +391,7 @@ def lm_head_loss(cfg: ModelConfig, head: jnp.ndarray, x: jnp.ndarray,
 def lm_logits(cfg: ModelConfig, head: jnp.ndarray, x: jnp.ndarray,
               axis: AxisCtx) -> jnp.ndarray:
     """Full logits for decoding: [B, S, V_local] (still vocab-sharded)."""
+    x = tp_entry_mark(x, axis.model)
     logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype)).astype(jnp.float32)
     return softcap(logits, cfg.final_logit_softcap)
 

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+from repro.compat import vma_of
 from repro.models.common import (AxisCtx, ModelConfig, dense_init,
                                  pvary_missing, rms_norm)
 
@@ -89,7 +91,7 @@ def linear_attention_chunked(q, k, v, log_decay, state0, *, chunk: int = 64,
 
     vma = set()
     for a in (qc, kc, vc, ldc):
-        vma |= set(jax.typeof(a).vma)
+        vma |= set(vma_of(a))
     state_end, o = lax.scan(step, pvary_missing(state0.astype(f32), tuple(vma)),
                             (qc, kc, vc, ldc))
     o = jnp.moveaxis(o, 0, 1).reshape(B, S, H, dv)
@@ -144,6 +146,7 @@ def apply_mamba(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, axis: AxisCtx, *,
     B, S, _ = x.shape
     hd = cfg.ssm_head_dim
     dt_ = x.dtype
+    x = compat.tp_entry_mark(x, axis.model)
     xs = jnp.einsum("bsd,df->bsf", x, p["w_x"].astype(dt_))
     z = jnp.einsum("bsd,df->bsf", x, p["w_z"].astype(dt_))
     Bm = jnp.einsum("bsd,dk->bsk", x, p["w_B"].astype(dt_))
@@ -236,7 +239,7 @@ def apply_rwkv(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, axis: AxisCtx, *,
             "x_cm": jnp.zeros((B, D), dt_),
         }
     # ---- time mix ----------------------------------------------------------
-    a = rms_norm(x, p["ln1"])
+    a = compat.tp_entry_mark(rms_norm(x, p["ln1"]), axis.model)
     aprev = _token_shift(a, state["x_tm"] if (decode or have_state) else None)
     mix = p["mix"].astype(dt_)
     xr, xk, xv, xg, xw = (a + mix[i] * (aprev - a) for i in range(5))
@@ -263,7 +266,7 @@ def apply_rwkv(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, axis: AxisCtx, *,
     y = jnp.einsum("bsd,de->bse", o, p["w_time_out"].astype(dt_))
     x = x + axis.psum_model(y)
     # ---- channel mix ---------------------------------------------------------
-    b = rms_norm(x, p["ln2"])
+    b = compat.tp_entry_mark(rms_norm(x, p["ln2"]), axis.model)
     bprev = _token_shift(b, state["x_cm"] if (decode or have_state) else None)
     cmix = p["cm_mix"].astype(dt_)
     xk2 = b + cmix[0] * (bprev - b)

@@ -11,6 +11,7 @@ from repro.core import roofline, stepfn
 from repro.core.accumulation import AccumConfig, make_grad_fn
 from repro.models import transformer as T
 from repro.models.common import AxisCtx, ModelConfig
+from repro import compat
 
 CFG = ModelConfig(name="t", arch_type="dense", num_layers=3, d_model=32,
                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
@@ -42,7 +43,7 @@ def _run(mesh, method, part, batch, key):
     sspecs = stepfn.storage_specs(CFG, axis, part)
     bspecs = stepfn.batch_specs(CFG, axis, microbatched=True)
     storage = stepfn.init_storage(CFG, mesh, key, partitioned=part)
-    fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(sspecs, bspecs),
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(sspecs, bspecs),
                        out_specs=(sspecs, {"loss": P(), "ntok": P(), "aux": P()}))
     return jax.jit(fn)(storage, batch), axis, tmpl
 
@@ -58,7 +59,7 @@ def _to_full(mesh, grads, axis, tmpl):
                                    stacked=zp.is_stacked_path(path))
         return jax.tree_util.tree_map_with_path(conv, storage, tmpl, fspecs)
 
-    fn = jax.shard_map(gather, mesh=mesh, in_specs=(pspecs,), out_specs=fspecs,
+    fn = compat.shard_map(gather, mesh=mesh, in_specs=(pspecs,), out_specs=fspecs,
                        check_vma=False)
     return jax.jit(fn)(grads)
 
@@ -100,7 +101,7 @@ def test_collective_schedule_claim(mesh22):
             else:
                 shapes = jax.tree.map(
                     lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tmpl)
-            fn = jax.shard_map(grad_fn, mesh=mesh22, in_specs=(sspecs, bspecs),
+            fn = compat.shard_map(grad_fn, mesh=mesh22, in_specs=(sspecs, bspecs),
                                out_specs=(sspecs, {"loss": P(), "ntok": P(),
                                                    "aux": P()}))
             c = roofline.analyze(fn, shapes, batch, mesh=mesh22)
@@ -142,7 +143,7 @@ def test_span_pods_partition(mesh_pod):
     bspecs = stepfn.batch_specs(CFG, axis, microbatched=True)
     storage = stepfn.init_storage(CFG, mesh_pod, key, partitioned=True,
                                   span_pods=True)
-    fn = jax.shard_map(grad_fn, mesh=mesh_pod, in_specs=(sspecs, bspecs),
+    fn = compat.shard_map(grad_fn, mesh=mesh_pod, in_specs=(sspecs, bspecs),
                        out_specs=(sspecs, {"loss": P(), "ntok": P(), "aux": P()}))
     grads, metrics = jax.jit(fn)(storage, batch)
 
@@ -156,7 +157,7 @@ def test_span_pods_partition(mesh_pod):
                                    stacked=zp.is_stacked_path(path))
         return jax.tree_util.tree_map_with_path(conv, storage, tmpl, fspecs)
 
-    gfn = jax.shard_map(gather, mesh=mesh_pod, in_specs=(pspecs,),
+    gfn = compat.shard_map(gather, mesh=mesh_pod, in_specs=(pspecs,),
                         out_specs=fspecs, check_vma=False)
     full = jax.jit(gfn)(grads)
     for (pa, ga), (_, gb) in zip(jax.tree_util.tree_leaves_with_path(full),

@@ -7,6 +7,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import moe as moe_mod
 from repro.models.common import AxisCtx, ModelConfig
+from repro import compat
 
 CFG = ModelConfig(name="m", arch_type="moe", num_layers=1, d_model=32,
                   num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
@@ -30,7 +31,7 @@ def test_a2a_matches_dense_dispatch(mesh22):
         y, _ = moe_mod.apply_moe(CFG, p, x, axis, capacity_factor=8.0)
         return y
 
-    fn = jax.jit(jax.shard_map(f, mesh=mesh22,
+    fn = jax.jit(compat.shard_map(f, mesh=mesh22,
                                in_specs=(specs, P("data", None, None)),
                                out_specs=P("data", None, None)))
     out = fn(params, x)

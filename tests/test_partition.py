@@ -5,6 +5,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import partition as zp
+from repro import compat
 
 
 def test_partition_gather_roundtrip(mesh22):
@@ -19,7 +20,7 @@ def test_partition_gather_roundtrip(mesh22):
                                stacked=False)
         return back
 
-    fn = jax.shard_map(roundtrip, mesh=mesh22, in_specs=(P(None, None),),
+    fn = compat.shard_map(roundtrip, mesh=mesh22, in_specs=(P(None, None),),
                        out_specs=P(None, None), check_vma=False)
     out = jax.jit(fn)(leaf)
     np.testing.assert_allclose(np.asarray(out), np.asarray(leaf), rtol=1e-6)
@@ -32,7 +33,7 @@ def test_scatter_reduces(mesh22):
         return zp.gather_local(chunk, "data", (4, 4), jnp.float32,
                                stacked=False)
 
-    fn = jax.shard_map(f, mesh=mesh22, in_specs=(P(None, None),),
+    fn = compat.shard_map(f, mesh=mesh22, in_specs=(P(None, None),),
                        out_specs=P(None, None), check_vma=False)
     g = jnp.ones((4, 4))
     out = jax.jit(fn)(g)     # replicated input -> sum over 2 data shards

@@ -12,6 +12,7 @@ from repro.core.pipeline import (from_stage_stack, make_pipeline_grad_fn,
 from repro.core.schedules import PipeSpec
 from repro.models import transformer as T
 from repro.models.common import AxisCtx, ModelConfig
+from repro import compat
 
 CFG = ModelConfig(name="p", arch_type="dense", num_layers=8, d_model=32,
                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
@@ -46,7 +47,7 @@ def test_pipeline_equivalence(mesh_stage4, sched):
     specs = stage_param_specs(CFG, 1)
     bspecs = {k: P(None, None, None) for k in batch}
     grad_fn = make_pipeline_grad_fn(CFG, AxisCtx(), spec)
-    fn = jax.shard_map(grad_fn, mesh=mesh_stage4, in_specs=(specs, bspecs),
+    fn = compat.shard_map(grad_fn, mesh=mesh_stage4, in_specs=(specs, bspecs),
                        out_specs=(specs, {"loss": P(), "ntok": P()}))
     grads, metrics = jax.jit(fn)(pparams, batch)
     np.testing.assert_allclose(float(metrics["loss"]), ref, rtol=1e-5)
@@ -70,7 +71,7 @@ def test_bubble_and_traffic_tradeoff(mesh_stage4):
         specs = stage_param_specs(CFG, 1)
         bspecs = {k: P(None, None, None) for k in batch}
         grad_fn = make_pipeline_grad_fn(CFG, AxisCtx(), spec)
-        fn = jax.shard_map(grad_fn, mesh=mesh_stage4, in_specs=(specs, bspecs),
+        fn = compat.shard_map(grad_fn, mesh=mesh_stage4, in_specs=(specs, bspecs),
                            out_specs=(specs, {"loss": P(), "ntok": P()}))
         ps = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                           dict({k: v for k, v in params.items() if k != "layers"},
@@ -102,8 +103,7 @@ def test_pipeline_composes_with_data_parallelism():
     """The paper's improved method: modular pipeline x data parallelism.
     Gradients over a (stage=2, data=2) mesh match the sequential reference."""
     import jax as _jax
-    mesh = _jax.make_mesh((2, 2), ("stage", "data"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
     key = jax.random.PRNGKey(3)
     params = T.init_params(CFG, key)
     toks = jax.random.randint(key, (M, 4, 16), 0, 64)   # 2 per data shard
@@ -126,7 +126,7 @@ def test_pipeline_composes_with_data_parallelism():
     specs = stage_param_specs(CFG, 1)
     bspecs = {k: P(None, "data", None) for k in batch}
     grad_fn = make_pipeline_grad_fn(CFG, axis, spec)
-    fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
                        out_specs=(specs, {"loss": P(), "ntok": P()}))
     grads, metrics = jax.jit(fn)(pparams, batch)
     np.testing.assert_allclose(float(metrics["loss"]), ref, rtol=1e-5)
@@ -148,8 +148,7 @@ def test_partitioned_modular_pipeline():
     from repro.core.pipeline import (make_partitioned_pipeline_grad_fn,
                                      to_partitioned_stage_stack)
 
-    mesh = _jax.make_mesh((2, 2), ("stage", "data"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
     key = jax.random.PRNGKey(3)
     params = T.init_params(CFG, key)
     toks = jax.random.randint(key, (M, 4, 16), 0, 64)
@@ -181,7 +180,7 @@ def test_partitioned_modular_pipeline():
     bspecs = {k: P(None, "data", None) for k in batch}
     grad_fn = make_partitioned_pipeline_grad_fn(CFG, axis, spec,
                                                 layer_template)
-    fn = jax.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
                        out_specs=(specs, {"loss": P(), "ntok": P()}))
     grads, metrics = jax.jit(fn)(pparams, batch)
     np.testing.assert_allclose(float(metrics["loss"]), ref, rtol=1e-5)

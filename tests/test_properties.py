@@ -2,11 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.schedules import PipeSpec
 from repro.models.common import ModelConfig, apply_rope, softcap
 from repro.models.ssm import linear_attention_chunked
+from repro import compat
 
 SET = dict(max_examples=25, deadline=None)
 
@@ -107,8 +111,7 @@ def test_grad_accum_linearity(seed):
     cfg = ModelConfig(name="g", arch_type="dense", num_layers=2, d_model=16,
                       num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=32,
                       dtype="float32", param_dtype="float32")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     axis = stepfn.axis_ctx(mesh)
     tmpl = stepfn.full_template(cfg)
     key = jax.random.PRNGKey(seed)
@@ -119,7 +122,7 @@ def test_grad_accum_linearity(seed):
     grads = {}
     for M, batch in ((4, batch4), (2, batch2)):
         acc = AccumConfig(method="layered", partitioned=False, n_microbatches=M)
-        fn = jax.shard_map(make_grad_fn(cfg, axis, acc, tmpl), mesh=mesh,
+        fn = compat.shard_map(make_grad_fn(cfg, axis, acc, tmpl), mesh=mesh,
                            in_specs=(stepfn.storage_specs(cfg, axis, False),
                                      stepfn.batch_specs(cfg, axis,
                                                         microbatched=True)),

@@ -5,6 +5,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import roofline
+from repro import compat
 
 
 def test_dot_flops_exact():
@@ -29,7 +30,7 @@ def test_collective_axes_and_wire_bytes(mesh22):
         g = lax.all_gather(x, "data", axis=0, tiled=True)
         s = lax.psum(g, "model")
         return s
-    sf = jax.shard_map(f, mesh=mesh22, in_specs=P("data", None),
+    sf = compat.shard_map(f, mesh=mesh22, in_specs=P("data", None),
                        out_specs=P(None, None), check_vma=False)
     c = roofline.analyze(sf, jnp.zeros((4, 8)), mesh=mesh22)
     assert c.coll_bytes["data"] > 0
