@@ -1,0 +1,52 @@
+"""Planner smoke bench: reduced-grid search + roofline cross-check.
+
+Produces the ``BENCH_planner.json`` CI artifact: the ranked X_160 plans from
+the reduced search grid (winner must be the paper's table 6.1 config) and
+the predicted vs roofline-measured step composition for the smoke pipeline
+and accumulation programs (each term within 20% is the stated tolerance;
+the derived ``max_split_error`` tracks drift).
+"""
+from __future__ import annotations
+
+
+def bench_planner():
+    from repro import compat
+    from repro.core.schedules import PipeSpec
+    from repro.models.common import ModelConfig
+    from repro.planner import search as searchlib
+    from repro.planner import validate as V
+
+    plans = searchlib.search(160, grid="reduced", simulate_top=6, max_sims=16)
+    base, win = searchlib.baseline_and_winner(plans)
+    rows = [p.row() for p in plans[:6]]
+
+    cfg = ModelConfig(name="p", arch_type="dense", num_layers=8, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", param_dtype="float32")
+    mesh = compat.make_mesh((4,), ("stage",))
+    splits = []
+    for sched in ("modular", "naive"):
+        spec = PipeSpec(n_stages=4, layers_per_stage=2, n_microbatches=8,
+                        schedule=sched)
+        r = V.pipeline_composition(cfg, spec, mesh, 8, 2, 16)
+        splits.append({"program": f"pipeline/{sched}", **r})
+    mesh2 = compat.make_mesh((2, 1), ("data", "model"))
+    for method, part in (("layered", True), ("standard", True)):
+        r = V.accum_composition(cfg, mesh2, method=method, partitioned=part,
+                                n_microbatches=4, mb=2, seq=16)
+        splits.append({"program": f"accum/{method}/part={part}", **r})
+    rows.extend(splits)
+
+    errs = [abs(s["agreement"][k] - 1.0)
+            for s in splits for k in ("compute", "collective")]
+    derived = {
+        "winner": win.family,
+        "winner_n_gpu": win.n_gpu,
+        "winner_is_paper_optimum": (win.family == "modular/layered/part"
+                                    and win.n_gpu == 38640),
+        "speedup_vs_3d_baseline": (round(base.best_time_s / win.best_time_s, 3)
+                                   if base else None),
+        "max_split_error": round(max(errs), 4),
+        "split_tolerance": 0.20,
+    }
+    return rows, derived

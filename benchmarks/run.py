@@ -31,7 +31,7 @@ def main() -> None:
                     help="comma-separated bench names to run")
     args = ap.parse_args()
 
-    from benchmarks import paper_tables, system_benches
+    from benchmarks import paper_tables, planner_bench, system_benches
 
     benches = [
         ("table_6_1_fastest_configs", paper_tables.table_6_1),
@@ -44,6 +44,7 @@ def main() -> None:
         ("pipeline_bubble", system_benches.bench_pipeline_bubble),
         ("pallas_kernels", system_benches.bench_kernels),
         ("train_step_wallclock", system_benches.bench_train_step),
+        ("planner", planner_bench.bench_planner),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

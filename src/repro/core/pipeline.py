@@ -69,9 +69,15 @@ def from_stage_stack(stages: PyTree, spec: PipeSpec) -> PyTree:
 
 
 def stage_param_specs(cfg: ModelConfig, tp: int) -> PyTree:
-    """Specs for pipeline storage: layers get a leading 'stage' dim."""
+    """Specs for pipeline storage: layers are ``[S, K, ...]`` stage stacks —
+    TWO leading dims ('stage', then the within-stage layer index) before each
+    per-layer spec.  (Prepending only 'stage' silently shifted the 'model'
+    axis onto a weight dim for tp > 1 — invisible at tp == 1 where the
+    per-layer specs are all-None, and flushed out by the stage x model
+    composed-mesh tests.)"""
     base = T.param_specs(cfg, tp)
-    layers = jax.tree.map(lambda s: P("stage", *s), T.layer_specs(cfg, tp),
+    layers = jax.tree.map(lambda s: P("stage", None, *s),
+                          T.layer_specs(cfg, tp),
                           is_leaf=lambda x: isinstance(x, P))
     return dict({k: v for k, v in base.items() if k != "layers"}, layers=layers)
 

@@ -66,6 +66,41 @@ class PipeSpec:
         return self.total_outer_steps
 
     # ------------------------------------------------------------------
+    # Planner-facing accounting.  These are the quantities the discrete-event
+    # simulator (repro.planner.simulator) derives from its event counts; the
+    # property tests in tests/test_planner.py assert the two agree for both
+    # schedules, so the closed forms here stay honest.
+    @property
+    def compute_layer_ticks(self) -> int:
+        """Busy (non-bubble) layer-ticks per stage: K*M, schedule-invariant."""
+        return self.layers_per_stage * self.n_microbatches
+
+    @property
+    def p2p_sends_per_stage(self) -> int:
+        """Useful forward boundary transfers a stage issues: one per payload-
+        carrying permute (modular: every busy layer-tick, K*M; naive: once per
+        stage-visit, M), counting the final-layer wrap to the loss stage."""
+        M = self.n_microbatches
+        if self.schedule == "modular":
+            return self.layers_per_stage * M
+        return M
+
+    def p2p_bytes_per_tick(self, act_bytes: float) -> float:
+        """Wire bytes per permute round: one micro-batch boundary activation
+        in both schedules — the eq. 10 vs 11 traffic ratio comes from the
+        *number* of rounds, not the payload size."""
+        return float(act_bytes)
+
+    def fwd_p2p_bytes(self, act_bytes: float) -> float:
+        """Useful forward p2p bytes per stage for the given activation size."""
+        return self.p2p_sends_per_stage * self.p2p_bytes_per_tick(act_bytes)
+
+    def spmd_p2p_bytes(self, act_bytes: float) -> float:
+        """Forward wire bytes per stage of the SPMD lowering, which permutes
+        every tick (bubble ticks move garbage activations too)."""
+        return self.permutes * self.p2p_bytes_per_tick(act_bytes)
+
+    # ------------------------------------------------------------------
     # modular: per layer-tick state
     def modular_tick(self, t, s):
         """(busy, mb, weight_idx r, global_layer) at tick t for stage s."""

@@ -296,9 +296,35 @@ def run_all(out_dir: str, *, archs=None, shapes=None, meshes=(False, True),
     print(f"done; {len(failures)} failures: {failures}")
 
 
+def apply_plan(args, passed: set[str]) -> None:
+    """Adopt a plan's execution section (launch.plan output): arch, method,
+    partition and — when its mesh factors the 256-chip pod — the mesh shape.
+    Explicitly passed CLI flags win over the plan (same contract as
+    launch.train); the dry-run's workload shapes and micro-batch sizing
+    (derived from the shape) stay its own."""
+    from repro.planner.plan import execution_of, load_plan
+
+    ex = execution_of(load_plan(args.plan))
+    args.arch = args.arch or ex.get("arch")
+    if "method" in ex and "--method" not in passed:
+        args.method = ex["method"]
+    if "partitioned" in ex and "--no-partition" not in passed:
+        args.no_partition = not ex["partitioned"]
+    d, m = (int(v) for v in ex.get("mesh", "1x1").split("x"))
+    if "--mesh-shape" in passed:
+        pass
+    elif d * m == 256:
+        args.mesh_shape = ex["mesh"]
+    elif "mesh" in ex:
+        print(f"[plan] mesh {ex['mesh']} is not a 256-chip factorisation; "
+              f"keeping the default production mesh")
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--arch", default=None)
+    ap.add_argument("--plan", default=None,
+                    help="JSON plan from `python -m repro.launch.plan`")
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--method", default="layered",
@@ -317,6 +343,9 @@ def main() -> None:
                          "subprocesses")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+    if args.plan:
+        apply_plan(args, {a.split("=")[0] for a in sys.argv[1:]
+                          if a.startswith("--")})
     if args.all:
         run_all(args.out, method=args.method)
         return

@@ -1,0 +1,117 @@
+"""Config auto-search CLI: from analysis to an executable plan.
+
+Paper-scale analysis (no jax needed, closed forms + event simulation):
+
+  python -m repro.launch.plan --arch paper-x --size 160
+  python -m repro.launch.plan --arch paper-x --size 160 --net ethernet \\
+      --grid reduced --out plan_x160.json
+
+Executable smoke plan for a registry arch (traced costs, local devices):
+
+  python -m repro.launch.plan --arch gemma-2b --smoke --devices 4 \\
+      --global-batch 8 --out plan_gemma.json
+  python -m repro.launch.train --plan plan_gemma.json --steps 10
+
+The paper-x document reports the full ranked plan list, the winner, the
+conventional 3d baseline and the speedup between them (table 6.1's headline
+comparison, ~1.9x at x=160).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import calculator as calc
+import repro.planner.plan as planlib
+import repro.planner.search as searchlib
+
+NETS = {"ib": "ib", "ethernet": "ethernet", "nvlink": "nvlink"}
+
+
+def _print_paper_table(doc: dict) -> None:
+    cols = ("family", "n_a", "n_l", "n_b", "n_mu", "b_mu", "n_gpu",
+            "time_days", "sim_time_days")
+    widths = {c: max(len(c), 9) for c in cols}
+    widths["family"] = 26
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in doc["plans"]:
+        print("  ".join(str(r.get(c, "-")).ljust(widths[c]) for c in cols))
+    win = doc["winner"]
+    print(f"\nwinner: {win['family']}  n_a={win['n_a']} n_l={win['n_l']} "
+          f"n_mu={win['n_mu']} b_mu={win['b_mu']} n_gpu={win['n_gpu']} "
+          f"-> {win.get('sim_time_days', win['time_days'])} days")
+    if "baseline_3d" in doc:
+        b = doc["baseline_3d"]
+        print(f"3d baseline: {b['family']}  n_l={b['n_l']} n_mu={b['n_mu']} "
+              f"n_gpu={b['n_gpu']} -> "
+              f"{b.get('sim_time_days', b['time_days'])} days")
+        print(f"speedup vs 3d baseline: {doc['speedup_vs_3d_baseline']}x "
+              f"(paper table 6.1: ~1.9x)")
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="search distributed-training configurations and emit a "
+                    "JSON plan")
+    ap.add_argument("--arch", required=True,
+                    help="'paper-x' (analysis, with --size) or a registry "
+                         "arch (executable smoke plan, with --smoke)")
+    ap.add_argument("--size", type=int, default=160,
+                    help="x of the X_[x] family (paper-x mode)")
+    ap.add_argument("--net", default="ib", choices=sorted(NETS),
+                    help="inter-node link for the paper-x analysis")
+    ap.add_argument("--grid", default="full", choices=["full", "reduced"])
+    ap.add_argument("--top", type=int, default=12,
+                    help="ranked plans to print / save")
+    ap.add_argument("--simulate-top", type=int, default=12)
+    ap.add_argument("--max-sims", type=int, default=64)
+    ap.add_argument("--max-gpus", type=int, default=100_000,
+                    help="prune plans needing more GPUs (0 = unlimited)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="plan for the reduced (CPU-friendly) config of a "
+                         "registry arch; without it the execution plan "
+                         "targets the full-size config")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="device count for --smoke (0 = all local devices)")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--microbatches", default="1,2,4",
+                    help="comma-separated n_mu candidates for --smoke")
+    ap.add_argument("--out", default=None, help="write the plan JSON here")
+    args = ap.parse_args(argv)
+
+    if args.arch.startswith("paper-x") or args.arch == "paper-x":
+        x = args.size
+        if args.arch not in ("paper-x", f"paper-x{x}"):
+            x = int(args.arch.removeprefix("paper-x"))
+        hw = calc.Hardware()
+        net = getattr(hw, NETS[args.net])
+        plans = searchlib.search(x, hw, net=net, grid=args.grid,
+                                 simulate_top=args.simulate_top,
+                                 max_sims=args.max_sims,
+                                 max_gpus=args.max_gpus or None)
+        doc = planlib.paper_plan_document(x, plans, net_name=args.net,
+                                          top=args.top)
+        _print_paper_table(doc)
+    else:
+        devices = args.devices
+        if devices <= 0:
+            import jax
+            devices = jax.local_device_count()
+        mus = tuple(int(v) for v in args.microbatches.split(","))
+        doc = planlib.smoke_plan_document(
+            args.arch, devices=devices, global_batch=args.global_batch,
+            seq_len=args.seq_len, steps=args.steps, microbatch_options=mus,
+            smoke=args.smoke)
+        print(json.dumps(doc["execution"], indent=1))
+        print(f"({len(doc['plans'])} ranked executions; winner above)")
+
+    if args.out:
+        planlib.save_plan(doc, args.out)
+        print(f"plan written to {args.out}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

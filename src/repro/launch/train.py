@@ -9,11 +9,20 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b --smoke \\
       --method standard --no-partition --steps 10
+
+Planner integration (the analysis -> execution loop):
+  PYTHONPATH=src python -m repro.launch.plan --arch yi-6b --smoke \\
+      --devices 4 --out plan.json
+  PYTHONPATH=src python -m repro.launch.train --plan plan.json
+The plan's execution section supplies arch/mesh/method/partition/
+microbatches/global-batch/seq-len (and steps, unless --steps is passed
+explicitly); explicit CLI flags still win over the plan.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -27,9 +36,41 @@ from repro.launch.mesh import make_test_mesh
 from repro.optim.adam import AdamConfig, adam_init
 
 
+def apply_plan(args, argv) -> None:
+    """Fill args from a plan's execution section (launch.plan output).
+
+    Plan values override argparse *defaults*; flags the user passed
+    explicitly (present in argv) keep their CLI value.
+    """
+    from repro.planner.plan import execution_of, load_plan
+
+    ex = execution_of(load_plan(args.plan))
+    passed = {a.split("=")[0] for a in (argv or []) if a.startswith("--")}
+
+    def take(flag: str, attr: str, key: str):
+        if key in ex and flag not in passed:
+            setattr(args, attr, ex[key])
+
+    take("--arch", "arch", "arch")
+    take("--smoke", "smoke", "smoke")
+    take("--mesh", "mesh", "mesh")
+    take("--method", "method", "method")
+    take("--microbatches", "microbatches", "microbatches")
+    take("--global-batch", "global_batch", "global_batch")
+    take("--seq-len", "seq_len", "seq_len")
+    take("--steps", "steps", "steps")
+    if "partitioned" in ex and "--no-partition" not in passed:
+        args.no_partition = not ex["partitioned"]
+
+
 def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    # allow_abbrev=False: apply_plan detects explicitly-passed flags by their
+    # full spelling, so abbreviations must not be silently accepted
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--plan", default=None,
+                    help="JSON plan from `python -m repro.launch.plan`; "
+                         "its execution section fills unset flags")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=20)
@@ -48,6 +89,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
+    if args.plan:
+        apply_plan(args, argv if argv is not None else sys.argv[1:])
+    if not args.arch:
+        ap.error("--arch required (directly or via --plan)")
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     d, m = (int(v) for v in args.mesh.split("x"))

@@ -1,0 +1,24 @@
+"""Distributed-training planner: schedule simulation + config auto-search.
+
+Layers:
+
+  simulator.py   discrete-event simulator of pipeline schedules (gpipe /
+                 modular / 1f1b / interleaved-1f1b) with p2p transfers and
+                 data-axis ZeRO collectives, overlap and contention knobs;
+  search.py      pruned search over (schedule, accumulation method,
+                 partition, n_a, n_l, b_mu, n_mu) for the paper's X_[x]
+                 family, constrained by core/calculator.py, ranked by
+                 simulated step time;
+  plan.py        the JSON plan contract + executable smoke plans, consumed
+                 by ``launch.train --plan`` / ``launch.dryrun --plan``;
+  validate.py    predicted-vs-roofline cross-checks that pin the simulator's
+                 accounting to the lowered programs (imports jax; the other
+                 modules are pure Python).
+
+CLI: ``python -m repro.launch.plan`` (see repro/launch/plan.py).
+"""
+# NOTE: no function re-exports here — they would shadow the submodule names
+# (``repro.planner.search`` must stay the module, not the function).
+from repro.planner import plan, search, simulator  # noqa: F401
+from repro.planner.search import Plan  # noqa: F401
+from repro.planner.simulator import CostModel, SimConfig, SimResult  # noqa: F401

@@ -1,0 +1,173 @@
+"""Plan documents: the JSON contract between the planner and the launchers.
+
+Two kinds of plan:
+
+  * paper-scale analysis plans (``kind: "paper-x"``): the ranked output of
+    ``search.search`` for an X_[x] model — table 6.1 generalized to the full
+    (schedule x method x partition x mesh) space.  These describe clusters
+    far larger than any test machine; they are *analysis* artifacts.
+
+  * executable smoke plans (``kind: "execution"``): a small grid over mesh
+    factorizations / accumulation methods for a registry arch, sized to the
+    local device count.  The winner's ``execution`` dict is directly
+    consumable by ``launch.train --plan`` (and ``launch.dryrun --plan``),
+    closing the loop from analysis to real steps.
+
+``python -m repro.launch.plan`` produces either kind; see that module.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import repro.planner.search as searchlib
+
+PLAN_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Paper-scale analysis plans
+# ---------------------------------------------------------------------------
+def paper_plan_document(x: int, plans: list, *, net_name: str = "ib",
+                        top: int = 12) -> dict:
+    base, win = searchlib.baseline_and_winner(plans)
+    doc: dict[str, Any] = {
+        "version": PLAN_VERSION,
+        "kind": "paper-x",
+        "x": x,
+        "net": net_name,
+        "steps": searchlib.STEPS,
+        "plans": [p.row() for p in plans[:top]],
+        "winner": win.row(),
+    }
+    if base is not None:
+        doc["baseline_3d"] = base.row()
+        doc["speedup_vs_3d_baseline"] = round(
+            base.best_time_s / win.best_time_s, 3)
+    return doc
+
+
+def save_plan(doc: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=str)
+
+
+def load_plan(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("version", 0) > PLAN_VERSION:
+        raise ValueError(f"plan version {doc['version']} is newer than this "
+                         f"planner ({PLAN_VERSION})")
+    return doc
+
+
+def execution_of(doc: dict) -> dict:
+    """The execution dict of a plan document (winner's, for ranked docs)."""
+    if "execution" in doc:
+        return doc["execution"]
+    win = doc.get("winner", {})
+    if "execution" in win:
+        return win["execution"]
+    raise ValueError("plan document carries no execution section "
+                     "(paper-x analysis plans are not directly runnable; "
+                     "generate an execution plan with --smoke)")
+
+
+# ---------------------------------------------------------------------------
+# Executable smoke plans (registry archs, local device counts)
+# ---------------------------------------------------------------------------
+def _factorizations(n: int) -> list[tuple[int, int]]:
+    return [(d, n // d) for d in range(1, n + 1) if n % d == 0]
+
+
+def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
+                        seq_len: int = 64, steps: int = 5,
+                        microbatch_options: tuple[int, ...] = (1, 2, 4),
+                        smoke: bool = True) -> dict:
+    """Rank executable (mesh, method, partition, n_mu) combos for ``arch``
+    on ``devices`` local devices, using roofline-traced per-layer costs.
+    ``smoke`` selects the reduced config (and is recorded in the plan, so
+    ``launch.train --plan`` runs the same config that was costed).
+
+    Scoring mirrors the paper's accounting at smoke scale: per-device compute
+    (fwd + recompute + transposed dots), data-axis ZeRO/reduction bytes
+    placed per the accumulation method (layered overlaps them, standard
+    serializes the end-of-step psum), and un-overlapped per-layer tensor-
+    parallel psums.  Absolute times are meaningless on CPU; the *ranking*
+    follows the same mechanics the paper-scale search uses.
+    """
+    from repro import configs
+    from repro.core import roofline
+    from repro.planner import validate as V
+
+    cfg0 = configs.get_config(arch, smoke=smoke)
+    rows = []
+    for d, mdl in _factorizations(devices):
+        cfg = cfg0.padded_for_tp(mdl) if mdl > 1 else cfg0
+        L = cfg.num_layers
+        for M in microbatch_options:
+            if global_batch % (M * d) or global_batch < M * d:
+                continue
+            mb_local = global_batch // (M * d)
+            tc = V.traced_layer_costs(cfg, mb_local, seq_len)
+            f_dev = tc.flops_fwd_layer / mdl
+            head_dev = tc.flops_head / mdl
+            compute_s = (4.0 * L * M * f_dev + 3.0 * M * head_dev) \
+                / roofline.PEAK_FLOPS
+            ring_d = (d - 1) / d if d > 1 else 0.0
+            ring_m = (mdl - 1) / mdl if mdl > 1 else 0.0
+            # un-overlapped Megatron psums: ~4 per layer per micro-batch
+            # (attn out + mlp out, fwd + bwd), payload = one activation
+            tp_s = (4.0 * L * M * 2.0 * ring_m * tc.act_bytes
+                    / roofline.ICI_BW)
+            for method in ("layered", "standard"):
+                for part in ((False, True) if d > 1 else (False,)):
+                    if part:
+                        per_layer = 3.0 * ring_d * tc.layer_bytes
+                        n_coll = L * (M if method == "standard" else 1)
+                        data_bytes = (n_coll * per_layer
+                                      + 3.0 * ring_d * tc.outer_bytes
+                                      * (M if method == "standard" else 1))
+                    else:
+                        data_bytes = 2.0 * ring_d * (L * tc.layer_bytes
+                                                     + tc.outer_bytes)
+                    data_s = data_bytes / roofline.ICI_BW
+                    if method == "layered":
+                        step_s = max(compute_s, data_s) + tp_s
+                    else:
+                        step_s = compute_s + data_s + tp_s
+                    rows.append({
+                        "mesh": f"{d}x{mdl}",
+                        "method": method,
+                        "partitioned": part,
+                        "microbatches": M,
+                        "score_step_s": step_s,
+                        "compute_s": compute_s,
+                        "data_coll_s": data_s,
+                        "tp_coll_s": tp_s,
+                    })
+    if not rows:
+        raise ValueError(
+            f"no feasible execution for arch={arch} devices={devices} "
+            f"global_batch={global_batch} microbatches={microbatch_options}")
+    rows.sort(key=lambda r: (r["score_step_s"], not r["partitioned"]))
+    win = rows[0]
+    execution = {
+        "arch": arch,
+        "smoke": smoke,
+        "mesh": win["mesh"],
+        "method": win["method"],
+        "partitioned": win["partitioned"],
+        "microbatches": win["microbatches"],
+        "global_batch": global_batch,
+        "seq_len": seq_len,
+        "steps": steps,
+    }
+    return {
+        "version": PLAN_VERSION,
+        "kind": "execution",
+        "arch": arch,
+        "devices": devices,
+        "plans": rows,
+        "execution": execution,
+    }

@@ -1,0 +1,501 @@
+"""Discrete-event simulator of distributed training schedules.
+
+Simulates ONE optimizer step of a pipelined, data-parallel, optionally
+ZeRO-partitioned configuration at (micro-batch x layer-chunk) granularity.
+Four pipeline schedules:
+
+  gpipe        contiguous layer blocks; all forwards, flush, all backwards
+               (the paper's "naive" baseline, = schedules.PipeSpec "naive")
+  modular      the paper's §4 schedule: round-robin layer placement, one
+               layer per tick, micro-batches of a layer run consecutively
+               (= layered gradient accumulation per stage)
+  1f1b         PipeDream-flush: same bubble as gpipe but bounded in-flight
+               activations (Narayanan et al., 2021)
+  interleaved  interleaved 1F1B with V round-robin chunks per stage
+               (Megatron-LM); bubble shrinks ~V x for ~V x more p2p rounds
+
+Modelled resources, per pipeline stage (one representative device of the
+data-parallel group — the configuration is SPMD-symmetric over `data`):
+
+  * a compute engine: executes F/B units in the schedule's program order
+    (head-of-line; a stalled unit blocks the stage, as in the real scan);
+  * forward and backward p2p send engines: boundary activations / cotangent
+    transfers serialize per direction at ``act_bytes / p2p_bw`` each;
+  * a collective engine for data-axis collectives (ZeRO weight all-gathers,
+    gradient psum_scatter / psum) at ring-bandwidth wire bytes
+    ``(n-1)/n * bytes / coll_bw``.
+
+Overlap knobs: ``overlap_p2p=False`` charges sends to the producing stage's
+compute engine (the paper's un-overlapped improved-pipeline p2p, eq. 11);
+``overlap_coll=False`` does the same for data-axis collectives.
+``shared_link=True`` makes p2p and collectives contend for one wire.
+
+Placement of the data-axis collectives follows the accumulation method
+(core/accumulation.py): ``layered`` gathers each chunk's weights once per
+pass and reduces its gradient once per step, spread over the backward;
+``standard`` gathers per (chunk, micro-batch) when partitioned (3*L*M
+collectives) and reduces everything in one end-of-step psum when not.
+
+Tensor parallelism is not simulated event-by-event: its collectives are
+per-layer-internal and overlap-free by construction, so it is folded into
+the compute rate (``CostModel.flops_rate`` carries the 1/(1+overhead)
+efficiency factor, eq. 12).  Embedding/head work is marginal at paper scale
+and enters only as the ``t_head`` loss-turnaround latency.
+
+Everything is pure Python and deterministic: same inputs, same timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+SCHEDULES = ("gpipe", "modular", "1f1b", "interleaved")
+_ALIASES = {"naive": "gpipe"}
+
+
+def canonical_schedule(name: str) -> str:
+    name = _ALIASES.get(name, name)
+    if name not in SCHEDULES:
+        raise ValueError(f"unknown schedule {name!r}; known: {SCHEDULES}")
+    return name
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-unit costs.  Flops/bytes are per (layer x micro-batch) so the same
+    model serves every chunking; seconds are derived through the rates."""
+    flops_fwd_layer: float          # forward flops, one layer, one micro-batch
+    flops_bwd_layer: float          # backward (recompute + transposes)
+    act_bytes: float                # boundary activation bytes per micro-batch
+    layer_param_bytes: float        # one layer's weight bytes (gather payload)
+    layer_grad_bytes: float         # one layer's gradient bytes (reduce payload)
+    flops_rate: float               # effective device flops/s (tp_eff folded in)
+    p2p_bw: float                   # stage-to-stage bytes/s
+    coll_bw: float                  # data-axis bytes/s
+    t_head: float = 0.0             # loss turnaround latency after last layer
+
+    @property
+    def t_fwd_layer(self) -> float:
+        return self.flops_fwd_layer / self.flops_rate
+
+    @property
+    def t_bwd_layer(self) -> float:
+        return self.flops_bwd_layer / self.flops_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_stages: int
+    layers_per_stage: int           # K: layers owned by each stage
+    n_microbatches: int
+    schedule: str = "modular"       # gpipe | modular | 1f1b | interleaved
+    n_chunks: int = 0               # V (interleaved only; 0 = auto)
+    method: str = "layered"         # layered | standard (collective placement)
+    partitioned: bool = True        # ZeRO state partition over `data`
+    n_data: int = 1                 # data-axis size (collective wire factors)
+    overlap_p2p: bool = True
+    overlap_coll: bool = True
+    shared_link: bool = False       # p2p and collectives share one wire
+    include_backward: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "schedule", canonical_schedule(self.schedule))
+        K = self.layers_per_stage
+        if self.schedule == "modular":
+            v = K
+        elif self.schedule == "interleaved":
+            v = self.n_chunks or min(2, K)
+        else:
+            v = 1
+        assert K % v == 0, f"chunks {v} must divide layers/stage {K}"
+        object.__setattr__(self, "n_chunks", v)
+        if self.schedule == "interleaved":
+            M, S = self.n_microbatches, self.n_stages
+            # Megatron's interleaving constraint: with more micro-batches
+            # than stages, the group structure must tile evenly or the
+            # chunk-major 1F1B ordering deadlocks on the ragged group.
+            assert M <= S or M % S == 0, \
+                f"interleaved 1f1b needs n_mu <= n_stages or n_mu % " \
+                f"n_stages == 0 (got M={M}, S={S})"
+
+    @property
+    def round_robin(self) -> bool:
+        return self.schedule in ("modular", "interleaved")
+
+    @property
+    def layers_per_chunk(self) -> int:
+        return self.layers_per_stage // self.n_chunks
+
+    @property
+    def n_global_chunks(self) -> int:
+        return self.n_chunks * self.n_stages
+
+
+@dataclasses.dataclass
+class SimResult:
+    step_time: float
+    compute_s: float                  # busy compute seconds per stage (mean)
+    busy_per_stage: list[float]
+    bubble_fraction: float            # 1 - mean busy / step_time
+    p2p_s: float                      # total wire-seconds of p2p transfers
+    p2p_bytes: float
+    coll_s: float                     # total wire-seconds of data collectives
+    coll_bytes: float
+    counts: dict[str, Any]
+    peak_live_mb: list[int]           # max in-flight activations per stage
+    timeline: list | None = None
+
+    def summary(self) -> dict:
+        return {
+            "step_time_s": self.step_time,
+            "bubble_fraction": round(self.bubble_fraction, 4),
+            "compute_s": self.compute_s,
+            "p2p_s": self.p2p_s, "p2p_bytes": self.p2p_bytes,
+            "coll_s": self.coll_s, "coll_bytes": self.coll_bytes,
+            "peak_live_mb": max(self.peak_live_mb) if self.peak_live_mb else 0,
+            "counts": dict(self.counts),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-stage program order
+# ---------------------------------------------------------------------------
+def stage_order(sim: SimConfig, s: int) -> list[tuple[str, int, int]]:
+    """The (kind, chunk, micro-batch) unit sequence stage ``s`` executes."""
+    S, M, V = sim.n_stages, sim.n_microbatches, sim.n_chunks
+    sched = sim.schedule
+    if sched == "gpipe":
+        f = [("F", 0, mb) for mb in range(M)]
+        b = [("B", 0, mb) for mb in reversed(range(M))]
+        return f + b if sim.include_backward else f
+    if sched == "modular":
+        f = [("F", v, mb) for v in range(V) for mb in range(M)]
+        if not sim.include_backward:
+            return f
+        return f + [("B", v, mb) for (_, v, mb) in reversed(f)]
+    if sched == "1f1b":
+        f = [("F", 0, mb) for mb in range(M)]
+        b = [("B", 0, mb) for mb in range(M)]
+        if not sim.include_backward:
+            return f
+        return _one_f_one_b(f, b, warmup=min(S - 1 - s, M))
+    # interleaved: micro-batch groups of G, chunk-major within a group
+    G = min(S, M)
+    groups = [range(g, min(g + G, M)) for g in range(0, M, G)]
+    f = [("F", v, mb) for grp in groups for v in range(V) for mb in grp]
+    if not sim.include_backward:
+        return f
+    b = [("B", v, mb) for grp in groups for v in reversed(range(V))
+         for mb in grp]
+    warmup = min((S - 1 - s) * 2 + (V - 1) * G, V * M)
+    return _one_f_one_b(f, b, warmup=warmup)
+
+
+def _one_f_one_b(f: list, b: list, *, warmup: int) -> list:
+    out = list(f[:warmup])
+    steady = len(f) - warmup
+    for i in range(steady):
+        out.append(f[warmup + i])
+        out.append(b[i])
+    out.extend(b[steady:])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The event engine
+# ---------------------------------------------------------------------------
+class DeadlockError(RuntimeError):
+    pass
+
+
+def simulate(sim: SimConfig, cost: CostModel, *,
+             record_timeline: bool = False) -> SimResult:
+    S, M, V = sim.n_stages, sim.n_microbatches, sim.n_chunks
+    k_c = sim.layers_per_chunk
+    n_g = sim.n_global_chunks
+    rr = sim.round_robin
+
+    t_f = k_c * cost.t_fwd_layer
+    t_b = k_c * cost.t_bwd_layer
+    t_p2p = (cost.act_bytes / cost.p2p_bw
+             if S > 1 and cost.p2p_bw > 0 else 0.0)
+    n = sim.n_data
+    ring = (n - 1) / n if n > 1 else 0.0
+    gather_bytes = ring * k_c * cost.layer_param_bytes
+    scatter_bytes = ring * k_c * cost.layer_grad_bytes
+    psum_bytes = 2.0 * ring * k_c * cost.layer_grad_bytes
+    t_gather = gather_bytes / cost.coll_bw if cost.coll_bw > 0 else 0.0
+    t_scatter = scatter_bytes / cost.coll_bw if cost.coll_bw > 0 else 0.0
+    t_psum = psum_bytes / cost.coll_bw if cost.coll_bw > 0 else 0.0
+
+    def chunk_gidx(v: int, s: int) -> int:
+        return v * S + s if rr else s
+
+    orders = [deque(stage_order(sim, s)) for s in range(S)]
+    n_units_total = sum(len(o) for o in orders)
+
+    stage_free = [0.0] * S
+    sendf_free = [0.0] * S
+    sendb_free = [0.0] * S
+    coll_free = [0.0] * S
+    if sim.shared_link:
+        sendb_free = sendf_free          # one wire: alias the engine list
+
+    def _take(engine: list[float], s: int, ready: float, dur: float) -> float:
+        start = max(ready, engine[s])
+        engine[s] = start + dur
+        return start + dur
+
+    def p2p_engine(direction: str) -> list[float]:
+        if sim.shared_link:
+            return sendf_free
+        return sendf_free if direction == "f" else sendb_free
+
+    def coll_engine() -> list[float]:
+        return sendf_free if sim.shared_link else coll_free
+
+    f_end: dict[tuple[int, int], float] = {}
+    arrive_a: dict[tuple[int, int], float] = {}   # fwd activation at chunk g
+    arrive_c: dict[tuple[int, int], float] = {}   # cotangent for chunk g
+    last_event = 0.0
+
+    # --- data-axis collective gating (prefetch model: gathers serialize on
+    # the collective engine in program order; issue time is unconstrained, so
+    # the model is bandwidth-bound, not latency-bound) -------------------
+    gather_ready_f: dict[tuple[int, int], float] = {}
+    gather_ready_b: dict[tuple[int, int], float] = {}
+    gather_ready_unit: dict[tuple[str, int, int, int], float] = {}
+    n_gathers = 0
+    if sim.partitioned and n > 1 and t_gather > 0 and not sim.overlap_coll:
+        pass   # charged to the compute engine at first use, below
+    elif sim.partitioned and n > 1:
+        eng = coll_engine()
+        if sim.method == "layered":
+            for s in range(S):
+                seen: list[int] = []
+                for kind, v, mb in orders[s]:
+                    key = (s, v)
+                    d = gather_ready_f if kind == "F" else gather_ready_b
+                    if key not in d:
+                        d[key] = _take(eng, s, 0.0, t_gather)
+                        n_gathers += 1
+        else:
+            for s in range(S):
+                for kind, v, mb in orders[s]:
+                    gather_ready_unit[(kind, s, v, mb)] = _take(
+                        eng, s, 0.0, t_gather)
+                    n_gathers += 1
+
+    remaining_b_chunk = {(s, v): M for s in range(S) for v in range(V)}
+    remaining_b_stage = [V * M for _ in range(S)]
+    n_reduces = 0
+    reduce_end = 0.0
+    coll_bytes_total = float(n_gathers) * gather_bytes
+    coll_s_total = float(n_gathers) * t_gather
+
+    busy = [0.0] * S
+    fwd_sends = [0] * S
+    bwd_sends = [0] * S
+    p2p_bytes_total = 0.0
+    p2p_s_total = 0.0
+    live = [0] * S
+    peak_live = [0] * S
+    timeline: list | None = [] if record_timeline else None
+    pending_gather_charge: dict[tuple, bool] = {}
+
+    def gather_gate(kind: str, s: int, v: int, mb: int) -> float:
+        """Ready-time contribution of the ZeRO weight gather for a unit."""
+        nonlocal n_gathers, coll_bytes_total, coll_s_total
+        if not sim.partitioned or n <= 1 or t_gather <= 0:
+            return 0.0
+        if sim.overlap_coll:
+            if sim.method == "layered":
+                d = gather_ready_f if kind == "F" else gather_ready_b
+                return d.get((s, v), 0.0)
+            return gather_ready_unit.get((kind, s, v, mb), 0.0)
+        # un-overlapped: the gather runs on the compute engine at first need
+        key = (kind, s, v) if sim.method == "layered" else (kind, s, v, mb)
+        if key not in pending_gather_charge:
+            pending_gather_charge[key] = True
+            stage_free[s] = max(stage_free[s], 0.0) + t_gather
+            n_gathers += 1
+            coll_bytes_total += gather_bytes
+            coll_s_total += t_gather
+        return 0.0
+
+    def issue_reduce(s: int, at: float, nbytes: float, dur: float) -> None:
+        nonlocal n_reduces, reduce_end, coll_bytes_total, coll_s_total
+        if n <= 1 or nbytes <= 0:
+            return
+        if sim.overlap_coll:
+            end = _take(coll_engine(), s, at, dur)
+        else:
+            start = max(at, stage_free[s])
+            stage_free[s] = start + dur
+            end = start + dur
+        n_reduces += 1
+        reduce_end = max(reduce_end, end)
+        coll_bytes_total += nbytes
+        coll_s_total += dur
+
+    def ready(s: int, unit: tuple[str, int, int]) -> bool:
+        kind, v, mb = unit
+        g = chunk_gidx(v, s)
+        if kind == "F":
+            return g == 0 or (g, mb) in arrive_a
+        return (g, mb) in arrive_c
+
+    def schedule_unit(s: int, unit: tuple[str, int, int]) -> None:
+        nonlocal last_event, p2p_bytes_total, p2p_s_total
+        kind, v, mb = unit
+        g = chunk_gidx(v, s)
+        gate = gather_gate(kind, s, v, mb)
+        if kind == "F":
+            inp = arrive_a.get((g, mb), 0.0)
+            start = max(stage_free[s], inp, gate)
+            end = start + t_f
+            stage_free[s] = end
+            busy[s] += t_f
+            f_end[(g, mb)] = end
+            live[s] += 1
+            peak_live[s] = max(peak_live[s], live[s])
+            # forward send (ring: the last chunk wraps to the loss stage).
+            # Un-overlapped p2p (paper eq. 11): the send serializes on the
+            # producing stage's compute engine instead of a send engine.
+            if S > 1:
+                if sim.overlap_p2p:
+                    done = _take(p2p_engine("f"), s, end, t_p2p)
+                else:
+                    stage_free[s] = end + t_p2p
+                    done = stage_free[s]
+                fwd_sends[s] += 1
+                p2p_bytes_total += cost.act_bytes
+                p2p_s_total += t_p2p
+            else:
+                done = end
+            if g < n_g - 1:
+                arrive_a[(g + 1, mb)] = done
+            else:
+                # loss turnaround: head latency + cotangent return transfer
+                # (kept on the send engine even when un-overlapped: the loss
+                # stage's compute timeline is not interrupted mid-step)
+                loss_stage = (s + 1) % S
+                cot = done + cost.t_head
+                if S > 1:
+                    cot = _take(p2p_engine("b"), loss_stage, cot, t_p2p)
+                    bwd_sends[loss_stage] += 1
+                    p2p_bytes_total += cost.act_bytes
+                    p2p_s_total += t_p2p
+                arrive_c[(g, mb)] = cot
+        else:
+            start = max(stage_free[s], f_end[(g, mb)],
+                        arrive_c[(g, mb)], gate)
+            end = start + t_b
+            stage_free[s] = end
+            busy[s] += t_b
+            live[s] -= 1
+            if g > 0:
+                if S > 1:
+                    if sim.overlap_p2p:
+                        done = _take(p2p_engine("b"), s, end, t_p2p)
+                    else:
+                        stage_free[s] = end + t_p2p
+                        done = stage_free[s]
+                    bwd_sends[s] += 1
+                    p2p_bytes_total += cost.act_bytes
+                    p2p_s_total += t_p2p
+                else:
+                    done = end
+                arrive_c[(g - 1, mb)] = done
+            # gradient reduction placement
+            remaining_b_chunk[(s, v)] -= 1
+            remaining_b_stage[s] -= 1
+            if sim.partitioned:
+                if sim.method == "layered":
+                    if remaining_b_chunk[(s, v)] == 0:
+                        issue_reduce(s, end, scatter_bytes, t_scatter)
+                else:
+                    issue_reduce(s, end, scatter_bytes, t_scatter)
+            else:
+                if sim.method == "layered":
+                    if remaining_b_chunk[(s, v)] == 0:
+                        issue_reduce(s, end, psum_bytes, t_psum)
+                elif remaining_b_stage[s] == 0:
+                    issue_reduce(s, end, V * psum_bytes, V * t_psum)
+        last_event = max(last_event, stage_free[s])
+        if timeline is not None:
+            timeline.append((s, kind, v, mb, round(start, 9), round(end, 9)))
+
+    # --- head-of-line scheduling loop ------------------------------------
+    work = deque(range(S))
+    in_work = [True] * S
+    n_scheduled = 0
+    while work:
+        s = work.popleft()
+        in_work[s] = False
+        progressed = False
+        while orders[s] and ready(s, orders[s][0]):
+            schedule_unit(s, orders[s].popleft())
+            n_scheduled += 1
+            progressed = True
+        if progressed:
+            for t in (s, (s + 1) % S, (s - 1) % S):
+                if not in_work[t]:
+                    in_work[t] = True
+                    work.append(t)
+    if n_scheduled != n_units_total:
+        stuck = {s: orders[s][0] for s in range(S) if orders[s]}
+        raise DeadlockError(
+            f"schedule deadlocked with {n_units_total - n_scheduled} units "
+            f"pending; heads: {stuck}")
+
+    step_time = max([last_event, reduce_end] + sendf_free + sendb_free)
+    mean_busy = sum(busy) / S
+    return SimResult(
+        step_time=step_time,
+        compute_s=mean_busy,
+        busy_per_stage=busy,
+        bubble_fraction=1.0 - mean_busy / step_time if step_time > 0 else 0.0,
+        p2p_s=p2p_s_total, p2p_bytes=p2p_bytes_total,
+        coll_s=coll_s_total, coll_bytes=coll_bytes_total,
+        counts={"fwd_units": V * M * S, "bwd_units": V * M * S
+                if sim.include_backward else 0,
+                "fwd_sends": fwd_sends, "bwd_sends": bwd_sends,
+                "gathers": n_gathers, "reduces": n_reduces},
+        peak_live_mb=peak_live,
+        timeline=timeline,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SPMD lowering equivalents (cross-validation against core/roofline.py)
+# ---------------------------------------------------------------------------
+def predict_spmd_composition(spec, cost: CostModel, *,
+                             fwd_extra_flops: float = 0.0,
+                             bwd_extra_flops: float = 0.0,
+                             bwd_p2p_mult: float = 1.0) -> dict:
+    """Predicted per-device cost composition of the repo's SPMD pipeline
+    lowering (core/pipeline.py) for a ``schedules.PipeSpec``.
+
+    The SPMD program differs from the event-level ideal in two accounted
+    ways: bubble ticks burn real flops on garbage, and every tick permutes.
+    Backward multipliers (verified against the lowered jaxpr): the per-tick
+    remat re-runs the forward dots (recompute) and adds their transposes —
+    ``flops_bwd_layer ~= 3x fwd`` — but the *recomputed forward ppermute is
+    dead code* in the transpose (no cotangent consumes its primal output, so
+    it is DCE'd), leaving exactly one transposed permute per tick:
+    ``bwd_p2p_mult = 1``.  ``*_extra_flops`` carry the stage-replicated
+    embed/head work (per device, whole step).  Compare against
+    ``roofline.analyze`` on the lowered grad fn.
+    """
+    layer_ticks = spec.layer_ticks_per_stage          # includes bubble ticks
+    flops = (layer_ticks * (cost.flops_fwd_layer + cost.flops_bwd_layer)
+             + fwd_extra_flops + bwd_extra_flops)
+    p2p = spec.spmd_p2p_bytes(cost.act_bytes) * (1.0 + bwd_p2p_mult)
+    return {
+        "dot_flops": flops,
+        "p2p_bytes": p2p,
+        "compute_s": flops / cost.flops_rate,
+        "collective_s": p2p / cost.p2p_bw if cost.p2p_bw > 0 else 0.0,
+    }

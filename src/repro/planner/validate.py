@@ -1,0 +1,242 @@
+"""Cross-validation of the planner's cost model against core/roofline.py.
+
+The simulator predicts a step's compute/collective composition from counts
+(ticks, permutes, gathers) times per-unit costs; roofline.analyze derives
+the same composition from the *lowered jaxpr* of the real step.  The
+functions here compute both for a given smoke config and return them side
+by side — the tests (and the ``planner`` CI bench) assert the two agree
+within tolerance (20% on each term), which pins the simulator's schedule
+accounting to the programs it claims to model.
+
+Per-unit costs are themselves traced (``traced_layer_costs`` runs roofline
+over a single ``apply_layer``), so the comparison checks the *scheduling*
+arithmetic — tick counts, permute counts, collective placement/frequency —
+rather than a hand-written flop formula.
+
+Backward multipliers, derived from how the repo lowers AD:
+  * pipeline (core/pipeline.py): per-tick remat => backward tick re-runs the
+    forward dots (recompute) and adds their transposes: flops_bwd = 3x fwd.
+    The recomputed forward ppermute is DCE'd (no cotangent consumes its
+    primal output), so backward adds exactly ONE transposed permute per
+    tick: p2p_bwd = 1x fwd (see simulator.predict_spmd_composition).
+  * layered accumulation (core/accumulation.py): the backward is hand-written
+    (vjp per layer restoring kept checkpoints): flops_bwd = 3x fwd, and per
+    layer one fwd gather + one bwd gather + one psum_scatter over `data`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import roofline
+from repro.core.schedules import PipeSpec
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig
+from repro.planner import simulator as simlib
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedCosts:
+    """Per-unit costs traced from the real model code (per device)."""
+    flops_fwd_layer: float        # one layer, one micro-batch, forward
+    flops_head: float             # final-norm + LM head, one micro-batch
+    act_bytes: float              # boundary activation bytes, one micro-batch
+    layer_bytes: float            # one layer's parameter bytes (storage dtype)
+    outer_bytes: float            # embed/head/norm parameter bytes
+
+
+def traced_layer_costs(cfg: ModelConfig, mb: int, seq: int) -> TracedCosts:
+    axis = AxisCtx()
+    windows, flags, _ = T.layer_tables(cfg)
+    tmpl = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    lp = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                      tmpl["layers"])
+    dt = jnp.dtype(cfg.dtype)
+    x = jax.ShapeDtypeStruct((mb, seq, cfg.d_model), dt)
+    pos = jax.ShapeDtypeStruct((mb, seq), jnp.int32)
+
+    def layer(lp, x, pos):
+        y, _ = T.apply_layer(cfg, lp, {}, x, positions=pos,
+                             window=windows[0], shared_flag=flags[0],
+                             axis=axis)
+        return y
+
+    c_layer = roofline.analyze(layer, lp, x, pos)
+
+    outer = {k: v for k, v in tmpl.items() if k not in ("layers", "shared")}
+    batch = {"labels": jax.ShapeDtypeStruct((mb, seq), jnp.int32),
+             "mask": jax.ShapeDtypeStruct((mb, seq), jnp.int32)}
+
+    def head(outer, x, batch):
+        from repro.models.common import apply_norm
+        h = apply_norm(cfg, outer["final_norm"], x)
+        return T.head_loss(cfg, outer, h, batch, axis)
+
+    c_head = roofline.analyze(head, outer, x, batch)
+
+    def nbytes(tree):
+        return sum(math.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree))
+
+    return TracedCosts(
+        flops_fwd_layer=c_layer.dot_flops,
+        flops_head=c_head.dot_flops,
+        act_bytes=mb * seq * cfg.d_model * dt.itemsize,
+        layer_bytes=nbytes(lp),
+        outer_bytes=nbytes(outer),
+    )
+
+
+def _agreement(pred: float, meas: float) -> float:
+    return pred / meas if meas > 0 else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline grad step: predicted vs roofline-measured composition
+# ---------------------------------------------------------------------------
+def pipeline_composition(cfg: ModelConfig, spec: PipeSpec, mesh,
+                         n_microbatches: int, mb: int, seq: int) -> dict:
+    """Compare the SPMD pipeline lowering's measured roofline terms with the
+    planner prediction for the same schedule."""
+    from repro.core.pipeline import make_pipeline_grad_fn, stage_param_specs, \
+        to_stage_stack
+
+    M = n_microbatches
+    tc = traced_layer_costs(cfg, mb, seq)
+
+    def staged():
+        p = T.init_params(cfg, jax.random.PRNGKey(0))
+        return dict({k: v for k, v in p.items() if k != "layers"},
+                    layers=to_stage_stack(p["layers"], spec))
+
+    pparams = jax.eval_shape(staged)
+    batch = {k: jax.ShapeDtypeStruct((M, mb, seq), jnp.int32)
+             for k in ("tokens", "labels", "mask")}
+    specs = stage_param_specs(cfg, 1)
+    bspecs = {k: P(None, None, None) for k in batch}
+    grad_fn = make_pipeline_grad_fn(cfg, AxisCtx(), spec)
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+                          out_specs=(specs, {"loss": P(), "ntok": P()}))
+    meas = roofline.analyze(fn, pparams, batch, mesh=mesh)
+
+    cost = simlib.CostModel(
+        flops_fwd_layer=tc.flops_fwd_layer,
+        flops_bwd_layer=3.0 * tc.flops_fwd_layer,
+        act_bytes=tc.act_bytes,
+        layer_param_bytes=0.0, layer_grad_bytes=0.0,
+        flops_rate=roofline.PEAK_FLOPS,
+        p2p_bw=roofline.ICI_BW, coll_bw=roofline.ICI_BW)
+    # embed/head run stage-replicated: head fwd once per micro-batch, its
+    # gradient (2x) via AD — all per device
+    pred = simlib.predict_spmd_composition(
+        spec, cost,
+        fwd_extra_flops=M * tc.flops_head,
+        bwd_extra_flops=2.0 * M * tc.flops_head)
+    measured = {"compute_s": meas.compute_s(),
+                "collective_s": meas.collective_s(),
+                "dot_flops": meas.dot_flops,
+                "coll_bytes": dict(meas.coll_bytes)}
+    return {
+        "config": {"schedule": spec.schedule, "S": spec.n_stages,
+                   "K": spec.layers_per_stage, "M": M},
+        "predicted": pred,
+        "measured": measured,
+        "agreement": {
+            "compute": _agreement(pred["compute_s"], measured["compute_s"]),
+            "collective": _agreement(pred["collective_s"],
+                                     measured["collective_s"]),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Accumulation grad step (data axis): predicted vs measured composition
+# ---------------------------------------------------------------------------
+def predict_accum_composition(cfg: ModelConfig, tc: TracedCosts, *,
+                              method: str, partitioned: bool,
+                              n_microbatches: int, n_data: int) -> dict:
+    """Planner prediction of the accumulation grad fn's per-device costs.
+
+    Collective placement mirrors core/accumulation.py: layered gathers each
+    layer twice (fwd + bwd pass) and reduces once; standard gathers per
+    (layer, micro-batch) — with the remat'd forward re-gathering during AD —
+    and reduce-scatters per micro-batch.  Non-partitioned methods psum once
+    per layer (layered, spread) or once per step (standard).
+    """
+    L, M, n = cfg.num_layers, n_microbatches, n_data
+    flops = (L * M * tc.flops_fwd_layer * 4.0      # fwd + recompute + 2x dots
+             + M * tc.flops_head * 3.0)
+    ring = (n - 1) / n if n > 1 else 0.0
+    if n <= 1:
+        coll = 0.0
+    elif partitioned:
+        if method == "layered":
+            per_layer = ring * tc.layer_bytes * 3.0        # 2 gathers + scatter
+            coll = L * per_layer + ring * tc.outer_bytes * 3.0
+        else:
+            # per (layer, mb): fwd gather + remat re-gather + scatter
+            coll = (L * M * ring * tc.layer_bytes * 3.0
+                    + M * ring * tc.outer_bytes * 3.0)
+    else:
+        psum = 2.0 * ring * (L * tc.layer_bytes + tc.outer_bytes)
+        coll = psum            # same wire bytes either placement
+    return {"dot_flops": flops, "coll_bytes": coll,
+            "compute_s": flops / roofline.PEAK_FLOPS,
+            "collective_s": coll / roofline.ICI_BW}
+
+
+def accum_composition(cfg: ModelConfig, mesh, *, method: str,
+                      partitioned: bool, n_microbatches: int,
+                      mb: int, seq: int) -> dict:
+    """Measured vs predicted composition of make_grad_fn on a data mesh."""
+    from repro.core import partition as zp
+    from repro.core import stepfn
+    from repro.core.accumulation import AccumConfig, make_grad_fn
+
+    M = n_microbatches
+    axis = stepfn.axis_ctx(mesh)
+    # the batch's micro-batch dim is sharded over `data`: per-device costs
+    # see the LOCAL micro-batch
+    assert mb % axis.ndata == 0, (mb, axis.ndata)
+    tc = traced_layer_costs(cfg, mb // axis.ndata, seq)
+    acc = AccumConfig(method=method, partitioned=partitioned,
+                      n_microbatches=M)
+    tmpl = stepfn.full_template(cfg)
+    grad_fn = make_grad_fn(cfg, axis, acc, tmpl)
+    sspecs = stepfn.storage_specs(cfg, axis, partitioned)
+    bspecs = stepfn.batch_specs(cfg, axis, microbatched=True)
+    if partitioned:
+        shapes = zp.partitioned_shapes(tmpl, T.param_specs(cfg, axis.tp),
+                                       axis.ndata, axis.tp)
+    else:
+        shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), tmpl)
+    batch = {k: jax.ShapeDtypeStruct((M, mb, seq), jnp.int32)
+             for k in ("tokens", "labels", "mask")}
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(sspecs, bspecs),
+                          out_specs=(sspecs, {"loss": P(), "ntok": P(),
+                                              "aux": P()}))
+    meas = roofline.analyze(fn, shapes, batch, mesh=mesh)
+    pred = predict_accum_composition(cfg, tc, method=method,
+                                     partitioned=partitioned,
+                                     n_microbatches=M, n_data=axis.ndata)
+    measured = {"compute_s": meas.compute_s(),
+                "collective_s": meas.collective_s(),
+                "dot_flops": meas.dot_flops,
+                "coll_bytes": dict(meas.coll_bytes)}
+    return {
+        "config": {"method": method, "partitioned": partitioned,
+                   "M": M, "n_data": axis.ndata},
+        "predicted": pred,
+        "measured": measured,
+        "agreement": {
+            "compute": _agreement(pred["compute_s"], measured["compute_s"]),
+            "collective": _agreement(pred["collective_s"],
+                                     measured["collective_s"]),
+        },
+    }
