@@ -31,7 +31,8 @@ def main() -> None:
                     help="comma-separated bench names to run")
     args = ap.parse_args()
 
-    from benchmarks import paper_tables, planner_bench, system_benches
+    from benchmarks import (kernels_bench, paper_tables, planner_bench,
+                            system_benches)
 
     benches = [
         ("table_6_1_fastest_configs", paper_tables.table_6_1),
@@ -42,9 +43,9 @@ def main() -> None:
         ("fig_7_offload_intensities", paper_tables.fig_7_offload),
         ("collective_schedule", system_benches.bench_collectives),
         ("pipeline_bubble", system_benches.bench_pipeline_bubble),
-        ("pallas_kernels", system_benches.bench_kernels),
         ("train_step_wallclock", system_benches.bench_train_step),
         ("planner", planner_bench.bench_planner),
+        ("kernels", kernels_bench.bench_kernels_suite),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

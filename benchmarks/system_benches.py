@@ -108,39 +108,6 @@ def bench_pipeline_bubble():
                   "paper_claim": "d_l/n_l = 2x (K=2)"}
 
 
-def bench_kernels():
-    """Pallas kernels vs jnp oracle (interpret mode wall time + allclose)."""
-    import numpy as np
-    from repro.kernels import ops
-    from repro.kernels.ref import flash_attention_ref, rmsnorm_ref
-
-    key = jax.random.PRNGKey(0)
-    B, S, H, D = 2, 256, 4, 64
-    q = jax.random.normal(key, (B, S, H, D))
-    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 2, D))
-    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, D))
-    rows = []
-    for name, fn, ref in [
-        ("flash_attention",
-         lambda: ops.flash_attention(q, k, v, block_q=64, block_k=64),
-         lambda: flash_attention_ref(q, k, v)),
-        ("rmsnorm",
-         lambda: ops.rmsnorm(q.reshape(-1, D), jnp.ones((D,))),
-         lambda: rmsnorm_ref(q.reshape(-1, D), jnp.ones((D,)))),
-    ]:
-        out = fn()
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            jax.block_until_ready(fn())
-        us = (time.perf_counter() - t0) / 3 * 1e6
-        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
-                                    - ref().astype(jnp.float32))))
-        rows.append({"kernel": name, "us_per_call": int(us),
-                     "max_err_vs_ref": err})
-    return rows, {"all_match": all(r["max_err_vs_ref"] < 1e-3 for r in rows)}
-
-
 def bench_train_step():
     """Wall-clock of one real train step (tiny model, CPU)."""
     from repro.core import stepfn

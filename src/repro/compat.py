@@ -175,6 +175,27 @@ def _relax_pre_vma_rep_checker() -> None:
     _smod._rewrite_rules[_smod.pbroadcast_p] = _ft.partial(
         _smod._no_rewrite, _smod.pbroadcast_p, _pbroadcast_check_permissive)
 
+    # Pallas kernels (kernels/*.py) run inside the shard_map'd train step but
+    # pre-vma shard_map ships no replication rule for pallas_call, so
+    # check_rep=True raises at trace time.  A Pallas call is collective-free
+    # per-device compute: its outputs are varying wherever any input is
+    # varying — the meet of the input replication sets — and the rewrite only
+    # needs to pbroadcast mixed-replication inputs down to that meet (a
+    # value-identity), exactly what _standard_rewrite_rule does.
+    try:
+        from jax._src.pallas.pallas_call import pallas_call_p as _pallas_call_p
+    except ImportError:  # pallas not present on this build
+        _pallas_call_p = None
+
+    if _pallas_call_p is not None:
+        def _pallas_check_permissive(mesh, *in_rep, **params):
+            known = [r for r in in_rep if r is not None]
+            return set.intersection(*known) if known else set(mesh.axis_names)
+
+        _smod._check_rules[_pallas_call_p] = _pallas_check_permissive
+        _smod._rewrite_rules[_pallas_call_p] = _ft.partial(
+            _smod._standard_rewrite_rule, _pallas_call_p)
+
 
 def _install_vma_style_psum_transpose() -> None:
     """Pre-vma JAX only: give ``psum`` the vma-era transpose semantics.

@@ -49,7 +49,9 @@ class AccumConfig:
     partitioned: bool = True       # ZeRO-3 partition over `data`
     n_microbatches: int = 1
     remat: bool = True
-    use_pallas: bool = False
+    # None = inherit ModelConfig.kernels (default on): the attention blocks
+    # run the differentiable Pallas flash kernel; True/False force it.
+    use_pallas: bool | None = None
     # TPU adaptation of the paper's checkpoint offload (§2.5/§8.2): the layered
     # schedule must keep every (layer x micro-batch) boundary activation; the
     # paper offloads them to CPU, here they are instead sharded over the

@@ -195,10 +195,14 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, acc: AccumConfig,
     bspecs = batch_specs(cfg, axis, microbatched=True)
     mspecs = {"loss": P(), "ntok": P(), "aux": P(), "lr": P(), "grad_norm": P()}
 
+    # the fused one-pass AdamW chunk kernel targets the flat fp32 partition
+    # chunks; replicated full-leaf storage keeps the tree-map update
+    fused_opt = cfg.kernels and acc.partitioned
+
     def step(storage, opt, batch):
         grads, metrics = grad_fn(storage, batch)
         storage, opt, om = adam_step(opt_cfg, storage, opt, grads,
-                                     sq_reduce=sq_reduce)
+                                     sq_reduce=sq_reduce, fused=fused_opt)
         metrics = dict(metrics, **om)
         return storage, opt, metrics
 
@@ -348,7 +352,18 @@ def build_fused_train_step(cfg: ModelConfig, mesh: Mesh, acc: AccumConfig,
             g = g.astype(jnp.float32)
             if c.grad_clip > 0:   # per-leaf clip (global norm unavailable)
                 n = jnp.sqrt(jnp.sum(jnp.square(g)) + 1e-16)
-                g = g * jnp.minimum(1.0, c.grad_clip / n)
+                gs = jnp.minimum(1.0, c.grad_clip / n)
+            else:
+                gs = jnp.ones(())
+            if cfg.kernels:
+                # the same one-pass chunk kernel, applied per layer the
+                # moment its gradient lands (§C.3 semantics preserved)
+                from repro.kernels import ops as kops
+                return kops.fused_adamw(p, m, v, g,
+                                        jnp.stack([lr, b1c, b2c, gs]),
+                                        b1=c.b1, b2=c.b2, eps=c.eps,
+                                        wd=c.weight_decay)
+            g = g * gs
             m32 = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
             v32 = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * jnp.square(g)
             p = p - lr * ((m32 / b1c) / (jnp.sqrt(v32 / b2c) + c.eps)

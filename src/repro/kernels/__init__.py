@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The differentiable Pallas hot path: flash attention (fwd + custom-VJP
+# bwd), fused RMSNorm VJP, and the fused AdamW chunk update, with pure-jnp
+# oracles in ref.py.  Public entry points live in ops.py; model code toggles
+# the whole suite via ModelConfig.kernels (default on, interpret mode on
+# CPU).

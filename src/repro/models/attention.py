@@ -134,17 +134,28 @@ CHUNKED_THRESHOLD = 8192
 
 def attention_train(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, *,
                     positions: jnp.ndarray, window: jnp.ndarray | int,
-                    axis: AxisCtx, use_pallas: bool = False,
+                    axis: AxisCtx, use_pallas: bool | None = None,
                     return_kv: bool = False):
     """x: [B, S, D] -> [B, S, D].  ``window``: 0 = global, >0 = sliding window.
 
-    ``window`` may be a traced scalar (per-layer table indexed inside a scan).
-    Long sequences automatically switch to the query-chunked path (or the
-    Pallas flash kernel when enabled).  ``return_kv`` additionally returns
-    the rope'd local K/V ([B, Hkv_l, S, hd]) for prefill cache building.
+    ``window`` may be a traced scalar, in which case it MUST be the per-layer
+    table scalar from ``cfg.layer_windows()`` (values in {0,
+    cfg.sliding_window}) — the Pallas path specializes on exactly those two
+    static values.  Arbitrary traced window values are only honored by the
+    non-Pallas paths (``use_pallas=False``).
+
+    ``use_pallas=None`` inherits ``cfg.kernels`` (default on).  Sequences
+    past CHUNKED_THRESHOLD use the query-chunked plain-JAX path regardless
+    (the flash BlockSpecs stage whole-S K/V per head, which does not fit
+    VMEM at 32k).  ``return_kv`` additionally returns the rope'd local K/V
+    ([B, Hkv_l, S, hd]) for prefill cache building.
     """
     B, S, _ = x.shape
     hd = cfg.head_dim
+    if use_pallas is None:
+        use_pallas = cfg.kernels
+    if S > CHUNKED_THRESHOLD:
+        use_pallas = False
     x = compat.tp_entry_mark(x, axis.model)
     q, k, v = _project_qkv(cfg, p, x, axis)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -156,6 +167,22 @@ def attention_train(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, *,
         from repro.kernels import ops as kops
         y = kops.flash_attention(q, k, v, causal=True, window=int(window),
                                  softcap=cfg.attn_logit_softcap)
+    elif use_pallas:
+        # ``window`` is the traced per-layer table scalar (indexed inside the
+        # layer scan).  The Pallas kernel needs a *static* window to prune
+        # k-blocks, but ModelConfig.layer_windows only ever emits the two
+        # values {0, cfg.sliding_window} — so specialize one kernel per value
+        # outside the data path and select on the traced flag.  HLO stays
+        # depth-independent (both specializations live in the one scan body).
+        from repro.kernels import ops as kops
+
+        def _specialized(w: int):
+            return lambda qkv: kops.flash_attention(
+                *qkv, causal=True, window=w, softcap=cfg.attn_logit_softcap)
+
+        y = lax.cond(jnp.asarray(window) > 0,
+                     _specialized(int(cfg.sliding_window)), _specialized(0),
+                     (q, k, v))
     else:
         ke, ve = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
         if S > CHUNKED_THRESHOLD and S % 512 == 0:

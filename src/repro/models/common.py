@@ -109,6 +109,12 @@ class ModelConfig:
     # --- numerics ----------------------------------------------------------
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
+    # --- fused Pallas kernels (kernels/) -----------------------------------
+    # Routes the training hot path (norms, flash attention, and — via the
+    # step builders — the fused AdamW chunk update) through the custom-VJP
+    # Pallas kernels.  Default on; set False to fall back to the pure-jnp
+    # reference paths for debugging (interpret mode on CPU either way).
+    kernels: bool = True
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -280,6 +286,9 @@ def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
 def apply_norm(cfg: ModelConfig, p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
     if cfg.norm == "layernorm":
         return layer_norm(x, p["scale"], p["bias"])
+    if cfg.kernels:
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, p["scale"], plus_one=cfg.norm == "rmsnorm_p1")
     return rms_norm(x, p["scale"], plus_one=cfg.norm == "rmsnorm_p1")
 
 

@@ -215,7 +215,7 @@ def _shared_attn_block(cfg: ModelConfig, shared: PyTree, x: jnp.ndarray,
 def apply_layer(cfg: ModelConfig, lp: PyTree, shared: PyTree, x: jnp.ndarray, *,
                 positions: jnp.ndarray, window: jnp.ndarray,
                 shared_flag: jnp.ndarray, axis: AxisCtx,
-                use_pallas: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+                use_pallas: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One layer, training mode.  Returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if cfg.block_kind == "rwkv":
@@ -275,7 +275,7 @@ def layer_tables(cfg: ModelConfig):
 # loop structure but reuse embed_inputs/apply_layer/head_loss)
 # ---------------------------------------------------------------------------
 def forward(cfg: ModelConfig, params: PyTree, batch: dict, axis: AxisCtx, *,
-            remat: bool = True, use_pallas: bool = False):
+            remat: bool = True, use_pallas: bool | None = None):
     x, positions = embed_inputs(cfg, params, batch, axis)
     windows, flags, _ = layer_tables(cfg)
 
@@ -302,7 +302,7 @@ def head_loss(cfg: ModelConfig, params: PyTree, x: jnp.ndarray, batch: dict,
 
 
 def loss_fn(cfg: ModelConfig, params: PyTree, batch: dict, axis: AxisCtx, *,
-            remat: bool = True, use_pallas: bool = False):
+            remat: bool = True, use_pallas: bool | None = None):
     """Summed token loss + aux.  Caller divides by the global token count."""
     x, aux = forward(cfg, params, batch, axis, remat=remat, use_pallas=use_pallas)
     nll = head_loss(cfg, params, x, batch, axis)

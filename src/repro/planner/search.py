@@ -227,6 +227,9 @@ def build_cost_model(m: calc.XModel, hw: calc.Hardware, plan: Plan,
                      net: float) -> simlib.CostModel:
     p_layer = m.p / m.d_l          # attention extras amortized per layer
     tp_eff = plan.efficiency.get("tp", 1.0)
+    # AdamW update working set per device per layer: fp32 master + mu + nu +
+    # reduced gradient (4 x 4 B/param), over the state shards this device owns
+    opt_shard = plan.n_a * (plan.n_b if plan.partitioned else 1)
     return simlib.CostModel(
         flops_fwd_layer=2.0 * plan.b_mu * m.d_s * p_layer / plan.n_a,
         flops_bwd_layer=6.0 * plan.b_mu * m.d_s * p_layer / plan.n_a,
@@ -236,6 +239,8 @@ def build_cost_model(m: calc.XModel, hw: calc.Hardware, plan: Plan,
         flops_rate=hw.c * tp_eff,
         p2p_bw=net,
         coll_bw=net,
+        opt_bytes_per_layer=16.0 * p_layer / opt_shard,
+        hbm_bw=hw.hbm_bw,
     )
 
 
@@ -256,6 +261,10 @@ def simulate_plan(m: calc.XModel, hw: calc.Hardware, plan: Plan, net: float,
         n_chunks=plan.n_chunks if plan.schedule == "interleaved" else 0,
         method=plan.method, partitioned=plan.partitioned, n_data=plan.n_b,
         overlap_p2p=plan.schedule in ("gpipe", "1f1b"),
+        # mirrors stepfn's dispatch: the one-pass chunk kernel serves any
+        # partitioned layout; placement (per-chunk §C.3 overlap vs end-of-
+        # step tail) follows plan.method inside the simulator
+        fused_optimizer=plan.partitioned,
     )
     res = simlib.simulate(sim, build_cost_model(m, hw, plan, net))
     plan.sim = res.summary()

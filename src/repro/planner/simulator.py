@@ -61,6 +61,15 @@ def canonical_schedule(name: str) -> str:
     return name
 
 
+# HBM passes over the per-layer optimizer state (params + both Adam moments
+# + gradient) charged by the update step: the fused Pallas chunk kernel
+# (kernels/adamw.py) does one blocked read+write sweep; the unfused tree-map
+# stages each state tensor through separate elementwise ops (~6 round-trips,
+# measured against the repo's optim/adam.py lowering).
+OPT_PASSES_FUSED = 1.0
+OPT_PASSES_UNFUSED = 6.0
+
+
 @dataclasses.dataclass(frozen=True)
 class CostModel:
     """Per-unit costs.  Flops/bytes are per (layer x micro-batch) so the same
@@ -74,6 +83,12 @@ class CostModel:
     p2p_bw: float                   # stage-to-stage bytes/s
     coll_bw: float                  # data-axis bytes/s
     t_head: float = 0.0             # loss turnaround latency after last layer
+    # optimizer update path (0 disables the term — pre-fused-kernel behavior):
+    # per-device bytes of one layer's update working set (fp32 master shard +
+    # both Adam moments + reduced gradient) and the device HBM bandwidth the
+    # update sweeps run at.
+    opt_bytes_per_layer: float = 0.0
+    hbm_bw: float = 0.0
 
     @property
     def t_fwd_layer(self) -> float:
@@ -82,6 +97,13 @@ class CostModel:
     @property
     def t_bwd_layer(self) -> float:
         return self.flops_bwd_layer / self.flops_rate
+
+    def t_opt_layer(self, fused: bool) -> float:
+        """Seconds to apply one layer's AdamW update on this device."""
+        if self.opt_bytes_per_layer <= 0 or self.hbm_bw <= 0:
+            return 0.0
+        passes = OPT_PASSES_FUSED if fused else OPT_PASSES_UNFUSED
+        return passes * self.opt_bytes_per_layer / self.hbm_bw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +120,16 @@ class SimConfig:
     overlap_coll: bool = True
     shared_link: bool = False       # p2p and collectives share one wire
     include_backward: bool = True
+    # optimizer path (active when CostModel.opt_bytes_per_layer > 0).
+    # fused = the one-pass chunk kernel (kernels/adamw.py) at
+    # OPT_PASSES_FUSED x HBM traffic; unfused = the tree-map update at
+    # OPT_PASSES_UNFUSED x.  Placement follows the accumulation method
+    # independently of the pass count, mirroring the runtime: the layered
+    # schedule (§C.3) applies each chunk's update the moment its gradient is
+    # reduced, overlapping the rest of the backward; every other method runs
+    # one bulk update tail after its last reduce (stepfn dispatches the
+    # fused kernel for any partitioned layout, layered or not).
+    fused_optimizer: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "schedule", canonical_schedule(self.schedule))
@@ -144,6 +176,7 @@ class SimResult:
     coll_bytes: float
     counts: dict[str, Any]
     peak_live_mb: list[int]           # max in-flight activations per stage
+    opt_s: float = 0.0                # HBM-seconds of optimizer update sweeps
     timeline: list | None = None
 
     def summary(self) -> dict:
@@ -153,6 +186,7 @@ class SimResult:
             "compute_s": self.compute_s,
             "p2p_s": self.p2p_s, "p2p_bytes": self.p2p_bytes,
             "coll_s": self.coll_s, "coll_bytes": self.coll_bytes,
+            "opt_s": self.opt_s,
             "peak_live_mb": max(self.peak_live_mb) if self.peak_live_mb else 0,
             "counts": dict(self.counts),
         }
@@ -291,8 +325,16 @@ def simulate(sim: SimConfig, cost: CostModel, *,
     remaining_b_stage = [V * M for _ in range(S)]
     n_reduces = 0
     reduce_end = 0.0
+    stage_reduce_end = [0.0] * S
     coll_bytes_total = float(n_gathers) * gather_bytes
     coll_s_total = float(n_gathers) * t_gather
+    t_opt_chunk = k_c * cost.t_opt_layer(sim.fused_optimizer)
+    # per-chunk overlapped placement is a property of the layered schedule
+    # (§C.3), not of the kernel: other methods update in one end-of-step tail
+    opt_per_chunk = sim.method == "layered"
+    opt_free = [0.0] * S              # per-stage HBM engine (update sweeps)
+    opt_s_total = 0.0
+    n_opt = 0
 
     busy = [0.0] * S
     fwd_sends = [0] * S
@@ -336,8 +378,23 @@ def simulate(sim: SimConfig, cost: CostModel, *,
             end = start + dur
         n_reduces += 1
         reduce_end = max(reduce_end, end)
+        stage_reduce_end[s] = max(stage_reduce_end[s], end)
         coll_bytes_total += nbytes
         coll_s_total += dur
+
+    def charge_opt_fused(s: int, grad_ready: float) -> None:
+        """§C.3 fused update: one chunk's AdamW sweep starts the moment its
+        gradient is fully reduced.  It runs on the per-stage HBM engine
+        (``opt_free``), not the compute engine — the update has no dataflow
+        into the remaining backward chunks, so it overlaps them instead of
+        forming an end-of-step tail."""
+        nonlocal opt_s_total, n_opt
+        if t_opt_chunk <= 0:
+            return
+        start = max(opt_free[s], stage_reduce_end[s], grad_ready)
+        opt_free[s] = start + t_opt_chunk
+        opt_s_total += t_opt_chunk
+        n_opt += 1
 
     def ready(s: int, unit: tuple[str, int, int]) -> bool:
         kind, v, mb = unit
@@ -411,18 +468,21 @@ def simulate(sim: SimConfig, cost: CostModel, *,
             # gradient reduction placement
             remaining_b_chunk[(s, v)] -= 1
             remaining_b_stage[s] -= 1
+            chunk_done = remaining_b_chunk[(s, v)] == 0
             if sim.partitioned:
                 if sim.method == "layered":
-                    if remaining_b_chunk[(s, v)] == 0:
+                    if chunk_done:
                         issue_reduce(s, end, scatter_bytes, t_scatter)
                 else:
                     issue_reduce(s, end, scatter_bytes, t_scatter)
             else:
                 if sim.method == "layered":
-                    if remaining_b_chunk[(s, v)] == 0:
+                    if chunk_done:
                         issue_reduce(s, end, psum_bytes, t_psum)
                 elif remaining_b_stage[s] == 0:
                     issue_reduce(s, end, V * psum_bytes, V * t_psum)
+            if chunk_done and opt_per_chunk:
+                charge_opt_fused(s, end)
         last_event = max(last_event, stage_free[s])
         if timeline is not None:
             timeline.append((s, kind, v, mb, round(start, 9), round(end, 9)))
@@ -450,7 +510,18 @@ def simulate(sim: SimConfig, cost: CostModel, *,
             f"schedule deadlocked with {n_units_total - n_scheduled} units "
             f"pending; heads: {stuck}")
 
-    step_time = max([last_event, reduce_end] + sendf_free + sendb_free)
+    # non-layered methods: one bulk update tail per stage once all of its
+    # chunk gradients are reduced (pass count still set by fused_optimizer).
+    if (t_opt_chunk > 0 and not opt_per_chunk
+            and sim.include_backward):
+        for s in range(S):
+            start = max(stage_free[s], stage_reduce_end[s])
+            opt_free[s] = start + V * t_opt_chunk
+            opt_s_total += V * t_opt_chunk
+            n_opt += V
+
+    step_time = max([last_event, reduce_end]
+                    + opt_free + sendf_free + sendb_free)
     mean_busy = sum(busy) / S
     return SimResult(
         step_time=step_time,
@@ -462,8 +533,10 @@ def simulate(sim: SimConfig, cost: CostModel, *,
         counts={"fwd_units": V * M * S, "bwd_units": V * M * S
                 if sim.include_backward else 0,
                 "fwd_sends": fwd_sends, "bwd_sends": bwd_sends,
-                "gathers": n_gathers, "reduces": n_reduces},
+                "gathers": n_gathers, "reduces": n_reduces,
+                "opt_updates": n_opt},
         peak_live_mb=peak_live,
+        opt_s=opt_s_total,
         timeline=timeline,
     )
 

@@ -1,4 +1,6 @@
-"""Pallas kernels vs the jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs the jnp oracles: forward sweeps, VJP parity, the fused
+AdamW chunk update, and the no-O(S²)-backward guarantee — all in interpret
+mode."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,6 +44,77 @@ def test_flash_attention_dtypes(dtype):
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
 
 
+def test_flash_attention_noncausal_padding_masked():
+    """Regression: padded key rows must be masked explicitly — for the
+    non-causal (or windowed non-causal) case causality does not exclude
+    them, and before the kv_len in-kernel mask they leaked into the
+    softmax."""
+    key = jax.random.PRNGKey(3)
+    B, S, H, D = 1, 40, 2, 16                 # S=40 pads to 64 with 32-blocks
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    for window in (0, 12):
+        out = ops.flash_attention(q, k, v, causal=False, window=window,
+                                  block_q=32, block_k=32)
+        ref = flash_attention_ref(q, k, v, causal=False, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"w={window}")
+
+
+# ---------------------------------------------------------------------------
+# VJP parity vs reference autodiff
+# ---------------------------------------------------------------------------
+GRAD_CASES = [
+    # (shape, window, cap, causal)
+    ((2, 64, 4, 2, 32), 0, 0.0, True),
+    ((1, 96, 6, 3, 16), 24, 50.0, True),      # window + softcap + GQA
+    ((2, 48, 4, 1, 32), 16, 0.0, True),       # full replication (Hkv=1)
+    ((1, 80, 4, 4, 32), 0, 30.0, False),      # non-causal + softcap
+    ((1, 50, 2, 1, 16), 12, 0.0, False),      # odd S (padded), windowed
+]
+
+
+@pytest.mark.parametrize("shape,window,cap,causal", GRAD_CASES)
+def test_flash_attention_grads(shape, window, cap, causal):
+    B, S, Hq, Hkv, D = shape
+    key = jax.random.PRNGKey(S + window)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    f = lambda q, k, v: jnp.sum(jnp.sin(ops.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cap,
+        block_q=32, block_k=32)))
+    fr = lambda q, k, v: jnp.sum(jnp.sin(flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=cap)))
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"d{name}")
+
+
+def test_flash_attention_grads_bf16():
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 32),
+                          jnp.bfloat16)
+    f = lambda q, k, v: jnp.sum(ops.flash_attention(
+        q, k, v, window=16, block_q=32, block_k=32).astype(jnp.float32))
+    fr = lambda q, k, v: jnp.sum(flash_attention_ref(
+        q, k, v, window=16).astype(jnp.float32))
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g, gr):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-2, err_msg=f"d{name}")
+
+
 @pytest.mark.parametrize("rows,d", [(16, 128), (37, 256), (4, 512), (256, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rmsnorm(rows, d, dtype):
@@ -56,13 +129,94 @@ def test_rmsnorm(rows, d, dtype):
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("rows,d,plus_one", [(37, 256, False), (16, 128, True),
+                                             (300, 64, True)])
+def test_rmsnorm_grads(rows, d, plus_one):
+    key = jax.random.PRNGKey(rows + d)
+    x = jax.random.normal(key, (rows, d))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+
+    def ref(x, s):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        se = (1.0 + s) if plus_one else s
+        return x32 * jax.lax.rsqrt(var + 1e-6) * se
+
+    f = lambda x, s: jnp.sum(jnp.cos(ops.rmsnorm(x, s, plus_one=plus_one)))
+    fr = lambda x, s: jnp.sum(jnp.cos(ref(x, s)))
+    g, gr = jax.grad(f, (0, 1))(x, s), jax.grad(fr, (0, 1))(x, s)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gr[0]),
+                               rtol=1e-5, atol=1e-5, err_msg="dx")
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gr[1]),
+                               rtol=1e-5, atol=1e-5, err_msg="dscale")
+
+
+# ---------------------------------------------------------------------------
+# No O(S²) intermediate in the lowered backward
+# ---------------------------------------------------------------------------
+def _walk_avals(jaxpr, visit):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            visit(v.aval)
+        for val in eqn.params.values():
+            for u in (val if isinstance(val, (tuple, list)) else (val,)):
+                if hasattr(u, "jaxpr") and hasattr(u.jaxpr, "eqns"):
+                    _walk_avals(u.jaxpr, visit)
+                elif hasattr(u, "eqns"):
+                    _walk_avals(u, visit)
+
+
+def _max_quadratic_dims(fn, *args, S):
+    """Largest count of >=S dims in any intermediate of fn's jaxpr."""
+    jpr = jax.make_jaxpr(fn)(*args)
+    worst = [0]
+
+    def visit(aval):
+        if hasattr(aval, "shape"):
+            worst[0] = max(worst[0], sum(1 for d in aval.shape if d >= S))
+
+    _walk_avals(jpr.jaxpr, visit)
+    return worst[0]
+
+
+def test_no_quadratic_intermediate_in_backward():
+    """jax.grad through the flash custom VJP must never materialise an
+    [S, S]-shaped value — the whole point of the tiled backward.  The
+    reference path is the positive control (it does)."""
+    S, D = 256, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, S, 2, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 1, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, S, 1, D))
+    g = jax.grad(lambda q, k, v: jnp.sum(ops.flash_attention(
+        q, k, v, window=64, softcap=30.0, block_q=64, block_k=64)),
+        argnums=(0, 1, 2))
+    gr = jax.grad(lambda q, k, v: jnp.sum(flash_attention_ref(
+        q, k, v, window=64, softcap=30.0)), argnums=(0, 1, 2))
+    assert _max_quadratic_dims(g, q, k, v, S=S) <= 1
+    assert _max_quadratic_dims(gr, q, k, v, S=S) >= 2   # ref: [.., S, S] logits
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: kernels on vs off through a transformer block
+# ---------------------------------------------------------------------------
+def _block_cfg(**kw):
+    import dataclasses
+    from repro.models.common import ModelConfig
+    base = ModelConfig(name="k", arch_type="dense", num_layers=4, d_model=64,
+                       num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                       sliding_window=16, local_global_period=2,
+                       attn_logit_softcap=30.0,
+                       dtype="float32", param_dtype="float32")
+    return dataclasses.replace(base, **kw)
+
+
 def test_flash_attention_in_model_layer():
     """use_pallas=True end-to-end through a dense layer forward."""
     from repro.models import transformer as T
-    from repro.models.common import AxisCtx, ModelConfig
-    cfg = ModelConfig(name="k", arch_type="dense", num_layers=2, d_model=64,
-                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
-                      dtype="float32", param_dtype="float32")
+    from repro.models.common import AxisCtx
+    cfg = _block_cfg(sliding_window=0, local_global_period=0,
+                     attn_logit_softcap=0.0, num_layers=2)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 97)
     batch = {"tokens": toks, "labels": toks, "mask": jnp.ones_like(toks)}
@@ -72,3 +226,63 @@ def test_flash_attention_in_model_layer():
                          use_pallas=True)
     np.testing.assert_allclose(np.asarray(x_pal), np.asarray(x_ref),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_block_grad_kernels_on_matches_off():
+    """Acceptance: jax.grad through a transformer block (windowed layers via
+    the per-layer table, softcap, GQA) with kernels on == kernels off within
+    fp32 1e-5."""
+    import dataclasses
+    from repro.models import transformer as T
+    from repro.models.common import AxisCtx
+    cfg_on = _block_cfg()
+    cfg_off = dataclasses.replace(cfg_on, kernels=False)
+    params = T.init_params(cfg_on, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, 97)
+    batch = {"tokens": toks, "labels": toks, "mask": jnp.ones_like(toks)}
+
+    def loss(cfg):
+        def f(p):
+            l, _ = T.loss_fn(cfg, p, batch, AxisCtx(), remat=True)
+            return l
+        return f
+
+    g_on = jax.jit(jax.grad(loss(cfg_on)))(params)
+    g_off = jax.jit(jax.grad(loss(cfg_off)))(params)
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(g_on),
+                                 jax.tree_util.tree_leaves_with_path(g_off)):
+        a, b = np.asarray(a), np.asarray(b)
+        # fp32 1e-5, scale-aware: atol relative to the leaf's grad magnitude
+        scale = max(float(np.max(np.abs(b))), 1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5 * scale,
+                                   err_msg=str(path))
+
+
+# ---------------------------------------------------------------------------
+# Fused AdamW chunk update
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block_rows", [None, 2])   # auto + forced tiling
+def test_fused_adamw_matches_treemap(block_rows):
+    from repro.kernels import adamw as aw
+
+    key = jax.random.PRNGKey(0)
+    p = jax.random.normal(key, (4, 1, 1, 700))       # odd chunk: pad path
+    m = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), p.shape)
+    v = jnp.abs(0.1 * jax.random.normal(jax.random.fold_in(key, 2), p.shape))
+    g = 0.3 * jax.random.normal(jax.random.fold_in(key, 3), p.shape)
+    lr, b1, b2, eps, wd = 1e-3, 0.9, 0.95, 1e-8, 0.1
+    b1c, b2c, gs = 0.19, 0.0975, 0.7
+    sc = jnp.array([lr, b1c, b2c, gs], jnp.float32)
+    po, mo, vo = aw.adamw_update(p, m, v, g, sc, b1=b1, b2=b2, eps=eps, wd=wd,
+                                 block_rows=block_rows, interpret=True)
+    gsd = g * gs
+    m32 = b1 * m + (1 - b1) * gsd
+    v32 = b2 * v + (1 - b2) * jnp.square(gsd)
+    pref = p - lr * ((m32 / b1c) / (jnp.sqrt(v32 / b2c) + eps) + wd * p)
+    # same float ops; only FMA contraction may differ between lowerings
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(m32),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vo), np.asarray(v32),
+                               rtol=1e-6, atol=1e-6)

@@ -77,6 +77,60 @@ def test_simulator_determinism():
     assert a.summary() == b.summary()
 
 
+def test_fused_optimizer_cheaper_and_overlapped():
+    """Pass count (fused 1 vs unfused 6 HBM sweeps) and placement (layered:
+    per-chunk overlapping the backward; standard: end-of-step tail) are
+    independent knobs, mirroring stepfn's dispatch.  opt_bytes = 0 must
+    reproduce the pre-optimizer-model timings exactly."""
+    base = simlib.CostModel(flops_fwd_layer=2.0, flops_bwd_layer=6.0,
+                            act_bytes=64.0, layer_param_bytes=256.0,
+                            layer_grad_bytes=512.0, flops_rate=1.0,
+                            p2p_bw=100.0, coll_bw=50.0)
+    cost = dataclasses.replace(base, opt_bytes_per_layer=640.0, hbm_bw=64.0)
+    res = {}
+    for fused in (True, False):
+        sim = simlib.SimConfig(n_stages=4, layers_per_stage=4,
+                               n_microbatches=8, schedule="modular",
+                               partitioned=True, n_data=4,
+                               fused_optimizer=fused)
+        res[fused] = simlib.simulate(sim, cost)
+    V = 4                                          # modular: chunk per layer
+    n_updates = V * 4
+    assert res[True].counts["opt_updates"] == n_updates
+    assert res[False].counts["opt_updates"] == n_updates
+    ratio = simlib.OPT_PASSES_UNFUSED / simlib.OPT_PASSES_FUSED
+    assert res[False].opt_s == pytest.approx(ratio * res[True].opt_s)
+    assert res[True].step_time < res[False].step_time
+    # standard method: same fused pass count, but an end-of-step tail —
+    # never cheaper than layered's overlapped per-chunk placement
+    std = simlib.simulate(
+        simlib.SimConfig(n_stages=4, layers_per_stage=4, n_microbatches=8,
+                         schedule="modular", method="standard",
+                         partitioned=True, n_data=4, fused_optimizer=True),
+        cost)
+    assert std.opt_s == pytest.approx(res[True].opt_s)
+    lay_no_opt = simlib.simulate(
+        simlib.SimConfig(n_stages=4, layers_per_stage=4, n_microbatches=8,
+                         schedule="modular", partitioned=True, n_data=4),
+        base)
+    std_no_opt = simlib.simulate(
+        simlib.SimConfig(n_stages=4, layers_per_stage=4, n_microbatches=8,
+                         schedule="modular", method="standard",
+                         partitioned=True, n_data=4), base)
+    # the tail is serial on top of standard's step; layered absorbs most
+    assert (std.step_time - std_no_opt.step_time) >= \
+        (res[True].step_time - lay_no_opt.step_time) - 1e-9
+    # opt term off -> identical to a cost model without the fields
+    off = simlib.simulate(
+        simlib.SimConfig(n_stages=4, layers_per_stage=4, n_microbatches=8,
+                         schedule="modular", partitioned=True, n_data=4,
+                         fused_optimizer=True), base)
+    ref = simlib.simulate(
+        simlib.SimConfig(n_stages=4, layers_per_stage=4, n_microbatches=8,
+                         schedule="modular", partitioned=True, n_data=4), base)
+    assert off.step_time == ref.step_time and off.opt_s == 0.0
+
+
 def test_1f1b_matches_gpipe_time_with_bounded_memory():
     """1F1B: same bubble/step time as GPipe, but in-flight activations are
     capped at the pipeline depth remaining (stage s holds <= S - s)."""

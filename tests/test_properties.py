@@ -99,6 +99,70 @@ def test_linear_recurrence_additivity(B, S, H, dk):
                                rtol=2e-3, atol=2e-3)
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([32, 48]), st.sampled_from([16, 32]),
+       st.sampled_from([1, 2]), st.sampled_from([1, 3]),
+       st.sampled_from([0, 16]), st.sampled_from([0.0, 20.0]),
+       st.booleans(), st.integers(0, 3))
+def test_flash_attention_vjp_matches_reference(S, D, Hkv, rep, window, cap,
+                                               causal, seed):
+    """Property: jax.grad through the Pallas flash custom VJP == grad through
+    the reference attention, across causal/window/softcap/GQA and odd
+    shapes (fp32, tol 1e-5)."""
+    from repro.kernels import ops
+    from repro.kernels.ref import flash_attention_ref
+
+    B, Hq = 1, Hkv * rep
+    S = S + seed                     # odd lengths: exercise the padded path
+    key = jax.random.PRNGKey(S * D + seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    f = lambda q, k, v: jnp.sum(jnp.sin(ops.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=cap,
+        block_q=16, block_k=16)))
+    fr = lambda q, k, v: jnp.sum(jnp.sin(flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=cap)))
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"d{name}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.sampled_from([64, 128, 256]), st.booleans(),
+       st.booleans())
+def test_rmsnorm_vjp_matches_reference(rows, d, plus_one, bf16):
+    """Property: the fused single-pass RMSNorm VJP == reference autodiff
+    (fp32 tol 1e-5 / bf16 tol 2e-2), including the rmsnorm_p1 variant."""
+    from repro.kernels import ops
+
+    dtype = jnp.bfloat16 if bf16 else jnp.float32
+    key = jax.random.PRNGKey(rows * d)
+    x = jax.random.normal(key, (rows, d), dtype)
+    s = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+
+    def ref(x, s):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        se = (1.0 + s) if plus_one else s
+        return (x32 * jax.lax.rsqrt(var + 1e-6) * se).astype(x.dtype)
+
+    f = lambda x, s: jnp.sum(jnp.cos(ops.rmsnorm(
+        x, s, plus_one=plus_one).astype(jnp.float32)))
+    fr = lambda x, s: jnp.sum(jnp.cos(ref(x, s).astype(jnp.float32)))
+    g, gr = jax.grad(f, (0, 1))(x, s), jax.grad(fr, (0, 1))(x, s)
+    tol = 2e-2 if bf16 else 1e-5
+    assert g[0].dtype == dtype
+    np.testing.assert_allclose(np.asarray(g[0], np.float32),
+                               np.asarray(gr[0], np.float32),
+                               rtol=tol, atol=tol, err_msg="dx")
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gr[1]),
+                               rtol=tol, atol=tol, err_msg="dscale")
+
+
 @settings(**SET)
 @given(st.integers(1, 4))
 def test_grad_accum_linearity(seed):
