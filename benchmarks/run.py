@@ -32,7 +32,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, paper_tables, planner_bench,
-                            system_benches)
+                            serving_bench, system_benches)
 
     benches = [
         ("table_6_1_fastest_configs", paper_tables.table_6_1),
@@ -46,6 +46,7 @@ def main() -> None:
         ("train_step_wallclock", system_benches.bench_train_step),
         ("planner", planner_bench.bench_planner),
         ("kernels", kernels_bench.bench_kernels_suite),
+        ("serving", serving_bench.bench_serving),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

@@ -1,0 +1,119 @@
+"""Serving benchmarks: paged vs dense decode, continuous vs static batching.
+
+Two groups, matching the serving subsystem's two claims:
+
+  * **decode step**: the Pallas paged-attention decode (block-table gather,
+    serving/steps.py) against the dense-cache ``decode_step`` at growing
+    live-batch sizes — both jitted, interpret mode on CPU like the rest of
+    the kernel benches.  On CPU this prices the gather overhead honestly;
+    the paged win is a *memory/admission* win, not a per-step flop win.
+  * **engine throughput**: the same Poisson trace of staggered requests
+    through the ServingEngine in ``continuous`` vs ``static`` batching
+    mode.  Static drains each batch fully before admitting (slots idle on
+    stragglers and late arrivals); continuous refills slots the step they
+    free.  Both runs share the jitted step fns (``fn_cache``), and each
+    mode gets an untimed warmup pass, so the tok/s gap is batching policy,
+    not compilation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _median_us(fn, *args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))            # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _trace(rng, vocab):
+    # short uniform prompts, HIGH max_new variance: the regime where static
+    # batching idles slots on stragglers and continuous backfills them
+    from repro.serving.scheduler import poisson_trace
+    return poisson_trace(rng, n_requests=12, rate=1.0, vocab=vocab,
+                         prompt_lens=[8], max_new=[8, 32])
+
+
+def bench_serving():
+    from repro.models import transformer as T
+    from repro.models.common import AxisCtx, ModelConfig
+    from repro.serving import steps
+    from repro.serving.cache import PagedCacheConfig, init_paged_cache
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import SchedulerConfig
+
+    cfg = ModelConfig(name="bench-serve", arch_type="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, dtype="float32", param_dtype="float32")
+    axis = AxisCtx()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+
+    # ---- paged vs dense decode step at growing live batches --------------
+    max_seq, bs = 64, 8
+    maxb = max_seq // bs
+    paged_us = dense_us = 1.0
+    for R in (2, 4, 8):
+        toks = jnp.zeros((R,), jnp.int32)
+        dense_cache = T.init_cache(cfg, R, max_seq, axis)
+        dense_cache["pos"] = jnp.asarray(16, jnp.int32)
+        dense = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t, axis))
+        dense_us = _median_us(lambda p, c, t: dense(p, c, t)[0],
+                              params, dense_cache, toks)
+
+        pcfg = PagedCacheConfig(num_blocks=R * maxb, block_size=bs,
+                                max_blocks_per_seq=maxb)
+        pool = init_paged_cache(cfg, pcfg, axis)
+        tables = jnp.arange(R * maxb, dtype=jnp.int32).reshape(R, maxb)
+        lens = jnp.full((R,), 16, jnp.int32)
+        paged = steps.build_paged_decode_fn(cfg, axis, donate=False)
+        paged_us = _median_us(lambda p, c, bt, ln, t: paged(p, c, bt, ln, t)[0],
+                              params, pool, tables, lens, toks)
+        rows.append({"bench": "decode_step", "batch": R,
+                     "dense_us": int(dense_us), "paged_us": int(paged_us),
+                     "cached_tokens_dense": R * max_seq,
+                     "cached_tokens_paged": int(jnp.sum((lens + bs - 1)
+                                                        // bs) * bs)})
+
+    # ---- engine throughput: continuous vs static batching ----------------
+    pcfg = PagedCacheConfig(num_blocks=40, block_size=8, max_blocks_per_seq=5)
+    fn_cache: dict = {}
+    tok_s = {}
+    for mode in ("continuous", "static"):
+        scfg = SchedulerConfig(cache=pcfg, max_batch=4, mode=mode)
+        dts = []
+        for i in range(3):                   # warmup pass, then 2 timed
+            eng = ServingEngine(cfg, params, scfg, fn_cache=fn_cache)
+            eng.submit_all(_trace(np.random.default_rng(7), cfg.vocab_size))
+            t0 = time.perf_counter()
+            eng.run()
+            if i > 0:
+                dts.append(time.perf_counter() - t0)
+        lat = [r.finish_step - r.arrival for r in eng.finished.values()]
+        tok_s[mode] = eng.stats["emitted_tokens"] / min(dts)
+        rows.append({"bench": f"engine_{mode}",
+                     "tok_s": round(tok_s[mode], 1),
+                     "emitted_tokens": eng.stats["emitted_tokens"],
+                     "engine_steps": eng.stats["engine_steps"],
+                     "decode_steps": eng.stats["decode_steps"],
+                     "tokens_per_engine_step": round(
+                         eng.stats["emitted_tokens"]
+                         / eng.stats["engine_steps"], 2),
+                     "mean_latency_steps": round(float(np.mean(lat)), 2),
+                     "preemptions": eng.stats["preemptions"]})
+
+    return rows, {
+        "continuous_tok_s": round(tok_s["continuous"], 1),
+        "static_tok_s": round(tok_s["static"], 1),
+        "continuous_speedup": round(tok_s["continuous"] / tok_s["static"], 3),
+        "paged_vs_dense_step_ratio": round(paged_us / dense_us, 3),
+    }

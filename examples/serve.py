@@ -1,64 +1,74 @@
-"""Serving example: prefill a batch of prompts, then decode with batched
-greedy sampling — the decode-shape path the dry-run lowers at 32k/500k.
+"""Serving example: ragged prompts through the paged continuous-batching
+engine (serving/) — prefill + greedy decode with per-request lifecycles.
 
     PYTHONPATH=src python examples/serve.py --arch gemma2-9b
 (uses the reduced smoke config of the chosen architecture on CPU)
+
+Ragged-prompt correctness note: the prompts here have *different* lengths,
+so the batch is right-padded for the prefill.  The old dense example took
+the prefill logits at the padded row's final position — wrong for every
+request shorter than the pad length.  The engine's paged prefill gathers
+each request's logits at its true last prompt position instead
+(serving/steps.py), so the first generated token is right for every row.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.data.synthetic import DataConfig, make_batch
 from repro.models import transformer as T
+from repro.models.common import AxisCtx
+from repro.serving.cache import PagedCacheConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, SchedulerConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-9b")
-    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=24,
+                    help="longest prompt; others are staggered shorter")
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, smoke=True)
-    if cfg.input_mode != "tokens":
-        raise SystemExit(f"{args.arch}: serve example needs token inputs")
-    # single-device serve: no mesh axes (the dry-run exercises the
-    # production-mesh shardings; see launch/dryrun.py)
-    from repro.models.common import AxisCtx
+    if cfg.input_mode != "tokens" or cfg.block_kind != "attn":
+        raise SystemExit(f"{args.arch}: serve example needs a token-input "
+                         f"attention stack")
     axis = AxisCtx()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                       global_batch=args.batch, n_microbatches=1)
-    prompts = make_batch(data, 0)["tokens"][0]          # [B, S]
-    batch = {"tokens": prompts,
-             "labels": jnp.zeros_like(prompts),
-             "mask": jnp.ones_like(prompts)}
+    prompts = np.asarray(make_batch(data, 0)["tokens"][0])      # [B, S]
 
-    max_seq = args.prompt_len + args.gen_len
-    cache = T.init_cache(cfg, args.batch, max_seq, axis)
-    t0 = time.time()
-    logits, cache = jax.jit(
-        lambda p, c, b: T.prefill_step(cfg, p, c, b, axis))(params, cache, batch)
-    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+    # ragged: request b keeps a staggered prefix of its prompt
+    lens = [max(2, args.prompt_len - 5 * b) for b in range(args.batch)]
+    max_tok = args.prompt_len + args.gen_len
+    pcfg = PagedCacheConfig(
+        num_blocks=args.batch * (-(-max_tok // args.block_size)) + 4,
+        block_size=args.block_size,
+        max_blocks_per_seq=-(-max_tok // args.block_size))
+    engine = ServingEngine(cfg, params,
+                           SchedulerConfig(cache=pcfg, max_batch=args.batch),
+                           axis=axis)
+    for b in range(args.batch):
+        engine.submit(Request(rid=b, prompt=tuple(map(int, prompts[b, :lens[b]])),
+                              max_new_tokens=args.gen_len, arrival=0))
 
-    decode = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t, axis))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
     t0 = time.time()
-    for _ in range(args.gen_len - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
+    outputs = engine.run()
     dt = time.time() - t0
-    gen = jnp.stack(out, 1)
-    print(f"decoded {args.gen_len} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s ({args.gen_len*args.batch/dt:.1f} tok/s)")
+    n_tok = engine.stats["emitted_tokens"]
+    print(f"prefilled {args.batch} ragged prompts (lens {lens}), decoded "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s, "
+          f"{engine.stats['engine_steps']} engine steps)")
     for b in range(min(args.batch, 2)):
-        print(f"  seq{b}: {list(map(int, gen[b]))}")
+        print(f"  seq{b} (prompt len {lens[b]}): {outputs[b]}")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels import adamw as _aw
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 
 
@@ -131,6 +132,27 @@ def rmsnorm(x, scale, *, eps: float = 1e-6, plus_one: bool = False,
     if interpret is None:
         interpret = _interpret_default()
     return _rmsnorm((float(eps), bool(plus_one), bool(interpret)), x, scale)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention decode (no VJP — inference territory)
+# ---------------------------------------------------------------------------
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, *,
+                    window: int = 0, softcap: float = 0.0,
+                    interpret: bool | None = None):
+    """Single-token decode attention over a paged KV cache.
+
+    q: [R, Hq, D]; pools: [N, Hkv, block_size, D]; block_tables: [R,
+    max_blocks] pool indices; context_lens: [R] live tokens per request.
+    Causal by construction (only the blocks covering the live context are
+    gathered); ``window``/``softcap`` as in ``flash_attention``.  Rows with
+    ``context_lens == 0`` return zeros (idle serving slots).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return _pa.paged_attention_decode(q, k_pool, v_pool, block_tables,
+                                      context_lens, window=window,
+                                      softcap=softcap, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,38 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
+                        window: int = 0, softcap: float = 0.0):
+    """Oracle for the paged decode kernel: gather every table entry, run a
+    dense masked softmax over the concatenated blocks.
+
+    q: [R, Hq, D]; pools: [N, Hkv, bs, D]; block_tables: [R, max_blocks];
+    context_lens: [R] (live tokens; the query is at ``ctx - 1``).  Rows with
+    ``ctx == 0`` are undefined here (the kernel returns zeros for them).
+    """
+    R, Hq, D = q.shape
+    _, Hkv, bs, _ = k_pool.shape
+    rep = Hq // Hkv
+    maxb = block_tables.shape[1]
+    k = jnp.moveaxis(k_pool[block_tables], 2, 1).reshape(R, Hkv, maxb * bs, D)
+    v = jnp.moveaxis(v_pool[block_tables], 2, 1).reshape(R, Hkv, maxb * bs, D)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("rhd,rhkd->rhk", q, k).astype(jnp.float32) * D ** -0.5
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = (context_lens - 1)[:, None, None]                   # [R, 1, 1]
+    k_pos = jnp.arange(maxb * bs)[None, None, :]
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= pos - k_pos < window
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("rhk,rhkd->rhd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
     """x: [..., D]; scale: [D]."""
     x32 = x.astype(jnp.float32)

@@ -1,0 +1,124 @@
+"""Serving driver: the continuous-batching engine over a synthetic trace.
+
+CPU-runnable at reduced scale; the same driver serves the full configs on a
+TPU slice.  Loads full-layout checkpoints written by ``launch.train``
+(streaming store format, checkpointing/store.py) or initialises fresh
+weights, builds the paged engine (serving/), and drains a Poisson arrival
+trace of synthetic requests, reporting throughput / latency / preemptions.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \\
+      --requests 12 --rate 0.5
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \\
+      --checkpoint-dir /tmp/ckpt --mode static
+  # planner serving mode: rank (tp x batch x cache layout) configs by
+  # simulated decode tok/s instead of running the engine
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --plan
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpointing import store
+from repro.models import transformer as T
+from repro.models.common import AxisCtx
+from repro.serving.cache import PagedCacheConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import SchedulerConfig, poisson_trace
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="full-layout checkpoint from launch.train "
+                         "(--no-partition --mesh 1x1)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrivals per engine step")
+    ap.add_argument("--prompt-lens", default="8,16,24")
+    ap.add_argument("--max-new", default="8,16")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="jnp reference attention instead of the Pallas "
+                         "paged kernel")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", action="store_true",
+                    help="rank serving configs with the planner's serving "
+                         "mode and exit (no engine run)")
+    ap.add_argument("--plan-mean-ctx", type=int, default=2048)
+    ap.add_argument("--plan-max-seq", type=int, default=4096)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    if args.plan:
+        from repro.planner.search import search_serving
+        plans = search_serving(cfg, mean_ctx=args.plan_mean_ctx,
+                               max_seq=args.plan_max_seq)
+        rows = [p.row() for p in plans[:12]]
+        for r in rows:
+            r.pop("sim")
+            print(json.dumps(r))
+        return {"plans": rows}
+
+    if cfg.input_mode != "tokens" or cfg.block_kind != "attn":
+        raise SystemExit(f"{args.arch}: paged serving needs a token-input "
+                         f"attention stack")
+    axis = AxisCtx()
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.checkpoint_dir:
+        params, step = store.load_state(args.checkpoint_dir, params)
+        print(f"loaded checkpoint at step {step} from {args.checkpoint_dir}")
+
+    max_tok = max(int(p) for p in args.prompt_lens.split(",")) + \
+        max(int(m) for m in args.max_new.split(","))
+    pcfg = PagedCacheConfig(
+        num_blocks=args.num_blocks, block_size=args.block_size,
+        max_blocks_per_seq=-(-max_tok // args.block_size))
+    engine = ServingEngine(
+        cfg, params, SchedulerConfig(cache=pcfg, max_batch=args.max_batch,
+                                     mode=args.mode),
+        axis=axis, use_pallas=None if not args.no_kernels else False)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = poisson_trace(
+        rng, n_requests=args.requests, rate=args.rate,
+        vocab=cfg.vocab_size,
+        prompt_lens=[int(p) for p in args.prompt_lens.split(",")],
+        max_new=[int(m) for m in args.max_new.split(",")])
+    engine.submit_all(reqs)
+
+    t0 = time.time()
+    outputs = engine.run()
+    dt = time.time() - t0
+    lat = [r.finish_step - r.arrival for r in engine.finished.values()]
+    result = {
+        "arch": args.arch, "mode": args.mode,
+        "requests": len(outputs),
+        "emitted_tokens": engine.stats["emitted_tokens"],
+        "engine_steps": engine.stats["engine_steps"],
+        "preemptions": engine.stats["preemptions"],
+        "tok_per_s": round(engine.stats["emitted_tokens"] / dt, 1),
+        "mean_latency_steps": round(float(np.mean(lat)), 2),
+        "seconds": round(dt, 2),
+    }
+    for rid in sorted(outputs)[:4]:
+        print(f"  req{rid}: {outputs[rid]}")
+    print(json.dumps(result))
+    return result
+
+
+if __name__ == "__main__":
+    main()

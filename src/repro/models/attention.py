@@ -81,6 +81,12 @@ def _project_qkv(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, axis: AxisCtx):
     return q, k, v
 
 
+# public alias: the serving decode path (repro/serving/steps.py) projects
+# q/k/v itself and runs attention through the paged kernel instead of the
+# dense cache math below.
+project_qkv = _project_qkv
+
+
 def _expand_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
     if n_rep == 1:
         return k

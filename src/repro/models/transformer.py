@@ -312,6 +312,11 @@ def loss_fn(cfg: ModelConfig, params: PyTree, batch: dict, axis: AxisCtx, *,
 
 # ---------------------------------------------------------------------------
 # Decode (serve_step): one token against a cache
+#
+# This dense [B, H, max_seq, hd] cache is the training-adjacent eval path:
+# every request pays for the longest context it might reach.  The serving
+# engine (repro/serving/) replaces it with a paged block pool + block
+# tables (serving/cache.py, serving/steps.py) so memory tracks live tokens.
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, axis: AxisCtx) -> PyTree:
     """Local cache shapes (already divided by the relevant mesh axes)."""

@@ -376,6 +376,120 @@ def search(x: int, hw: calc.Hardware | None = None, *,
     return plans
 
 
+# ---------------------------------------------------------------------------
+# Serving search (SimConfig.serving): rank decode configs by tok/s
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+
+@dataclasses.dataclass
+class ServePlan:
+    """One serving configuration: TP width x live batch x cache layout."""
+    tp: int
+    batch: int                      # live decode batch (engine slots)
+    block_size: int                 # paged block size; 0 = dense layout
+    mean_ctx: int                   # steady-state live context per request
+    max_seq: int                    # dense layout's allocated seq length
+    weight_gib: float = 0.0
+    kv_gib: float = 0.0             # steady-state allocated KV per device
+    time_s: float = 0.0             # simulated decode-step time
+    tok_s: float = 0.0
+    sim: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def layout(self) -> str:
+        return f"paged/{self.block_size}" if self.block_size else "dense"
+
+    def sort_key(self) -> tuple:
+        return (-self.tok_s, self.tp, self.batch)
+
+    def row(self) -> dict:
+        return {"layout": self.layout, "tp": self.tp, "batch": self.batch,
+                "mean_ctx": self.mean_ctx,
+                "weight_gib": round(self.weight_gib, 2),
+                "kv_gib": round(self.kv_gib, 2),
+                "step_us": round(self.time_s * 1e6, 1),
+                "tok_s": round(self.tok_s, 1), "sim": self.sim}
+
+
+def _serving_bytes(cfg, tp: int) -> tuple[float, float, float, float]:
+    """(weight bytes/device, kv bytes/token/device, decode flops/token,
+    TP collective bytes/token) for a ModelConfig on a tp-way model axis.
+
+    The KV numbers come from the engine's own layout helpers
+    (serving/cache.py), so the cost model cannot drift from what the paged
+    pool actually allocates.  Imported lazily: the planner stays
+    import-time jax-free (the serving package pulls in jax).
+    """
+    from repro.serving.cache import kv_bytes_per_token
+    itemsize = _DTYPE_BYTES.get(cfg.dtype, 2)
+    w = 2.0 * cfg.param_count() / tp                      # bf16 serving weights
+    kv_pt = float(kv_bytes_per_token(cfg, tp))
+    flops_pt = 2.0 * cfg.param_count(active_only=True) / tp
+    ring = (tp - 1) / tp if tp > 1 else 0.0
+    coll_pt = cfg.num_layers * 2.0 * ring * cfg.d_model * itemsize
+    return w, kv_pt, flops_pt, coll_pt
+
+
+def serving_cost_model(cfg, hw: calc.Hardware, tp: int) -> simlib.CostModel:
+    w, kv_pt, flops_pt, coll_pt = _serving_bytes(cfg, tp)
+    tp_eff = 1.0                                          # folded into coll_pt
+    return simlib.CostModel(
+        flops_fwd_layer=0.0, flops_bwd_layer=0.0, act_bytes=0.0,
+        layer_param_bytes=w / max(cfg.num_layers, 1), layer_grad_bytes=0.0,
+        flops_rate=hw.c * tp_eff, p2p_bw=hw.ib, coll_bw=hw.nvlink,
+        hbm_bw=hw.hbm_bw, kv_bytes_per_token=kv_pt,
+        serve_flops_per_token=flops_pt, serve_coll_bytes_per_token=coll_pt)
+
+
+def search_serving(cfg, hw: calc.Hardware | None = None, *,
+                   mean_ctx: int = 2048, max_seq: int = 4096,
+                   max_batch: int = 512,
+                   block_sizes: tuple = (0, 16, 32, 64, 128),
+                   tps: tuple | None = None) -> list[ServePlan]:
+    """Ranked serving configs for a ModelConfig: enumerate (tp, live batch,
+    cache layout), keep what fits HBM, rank by simulated decode tok/s.
+
+    The paged layouts allocate ``batch * ceil(mean_ctx / bs) * bs`` tokens of
+    KV (steady-state live blocks + tail fragmentation); the dense layout
+    allocates ``batch * max_seq`` regardless of the live context — the same
+    budget therefore admits a larger paged batch, which is where continuous
+    batching's throughput comes from at the planner level.
+    """
+    hw = hw or calc.Hardware()
+    if tps is None:
+        tps = tuple(t for t in (1, 2, 4, 8, 16)
+                    if t <= hw.max_node and cfg.num_heads % t == 0)
+    cap = 0.9 * hw.mem
+    plans: list[ServePlan] = []
+    for tp in tps:
+        w, kv_pt, _, _ = _serving_bytes(cfg, tp)
+        if w > cap:
+            continue
+        cost = serving_cost_model(cfg, hw, tp)
+        b = 1
+        while b <= max_batch:
+            for bs in block_sizes:
+                toks = (-(-mean_ctx // bs) * bs) if bs else max_seq
+                kv_alloc = float(b) * toks * kv_pt
+                if w + kv_alloc > cap:
+                    continue
+                sim = simlib.SimConfig(
+                    n_stages=1, layers_per_stage=max(cfg.num_layers, 1),
+                    n_microbatches=1, schedule="gpipe", serving=True,
+                    serve_batch=b, serve_ctx=mean_ctx, serve_block=bs,
+                    serve_max_seq=max_seq)
+                res = simlib.simulate(sim, cost)
+                plans.append(ServePlan(
+                    tp=tp, batch=b, block_size=bs, mean_ctx=mean_ctx,
+                    max_seq=max_seq, weight_gib=w / calc.GIB,
+                    kv_gib=kv_alloc / calc.GIB, time_s=res.step_time,
+                    tok_s=res.counts["tok_per_s"], sim=res.summary()))
+            b *= 2
+    plans.sort(key=ServePlan.sort_key)
+    return plans
+
+
 def baseline_and_winner(plans: list[Plan]) -> tuple[Plan | None, Plan]:
     """The paper's comparison pair: winner = top-ranked plan; baseline = best
     conventional 3d plan (contiguous pipeline, standard accumulation, no

@@ -89,6 +89,12 @@ class CostModel:
     # update sweeps run at.
     opt_bytes_per_layer: float = 0.0
     hbm_bw: float = 0.0
+    # serving-mode costs (SimConfig.serving; all 0 for training sims):
+    # per-device K+V bytes cached per token, decode flops per token, and the
+    # per-token tensor-parallel collective wire bytes (per-layer psums).
+    kv_bytes_per_token: float = 0.0
+    serve_flops_per_token: float = 0.0
+    serve_coll_bytes_per_token: float = 0.0
 
     @property
     def t_fwd_layer(self) -> float:
@@ -120,6 +126,21 @@ class SimConfig:
     overlap_coll: bool = True
     shared_link: bool = False       # p2p and collectives share one wire
     include_backward: bool = True
+    # -- serving mode -------------------------------------------------------
+    # Models ONE continuous-batching decode step instead of a training step:
+    # decode is HBM-bandwidth-bound (every step streams the whole weight
+    # shard plus the live KV working set once), so the step time is
+    # max(HBM sweep, matmul compute) plus the un-overlapped per-layer TP
+    # psums.  The paged layout (serve_block > 0) streams only the blocks
+    # covering each request's live context — ceil(ctx/bs)*bs tokens — while
+    # the dense layout streams the full allocated [B, max_seq] cache; that
+    # traffic gap is exactly what the paged pool buys at the step level
+    # (the admission-capacity gap is priced by search.search_serving).
+    serving: bool = False
+    serve_batch: int = 0            # live decode batch (requests)
+    serve_ctx: int = 0              # mean live context length (tokens)
+    serve_block: int = 0            # paged block size; 0 = dense layout
+    serve_max_seq: int = 0          # dense layout: allocated sequence length
     # optimizer path (active when CostModel.opt_bytes_per_layer > 0).
     # fused = the one-pass chunk kernel (kernels/adamw.py) at
     # OPT_PASSES_FUSED x HBM traffic; unfused = the tree-map update at
@@ -243,8 +264,39 @@ class DeadlockError(RuntimeError):
     pass
 
 
+def _simulate_serving(sim: SimConfig, cost: CostModel) -> SimResult:
+    """One decode step of a live batch against the weight + KV HBM streams."""
+    L = sim.n_stages * sim.layers_per_stage
+    R = sim.serve_batch
+    weight_bytes = L * cost.layer_param_bytes
+    if sim.serve_block > 0:
+        blocks = (sim.serve_ctx + sim.serve_block - 1) // sim.serve_block
+        toks_per_seq = blocks * sim.serve_block
+    else:
+        toks_per_seq = max(sim.serve_max_seq, sim.serve_ctx)
+    kv_bytes = float(R) * toks_per_seq * cost.kv_bytes_per_token
+    hbm_s = ((weight_bytes + kv_bytes) / cost.hbm_bw
+             if cost.hbm_bw > 0 else 0.0)
+    compute_s = (R * cost.serve_flops_per_token / cost.flops_rate
+                 if cost.flops_rate > 0 else 0.0)
+    coll_bytes = float(R) * cost.serve_coll_bytes_per_token
+    coll_s = coll_bytes / cost.coll_bw if cost.coll_bw > 0 else 0.0
+    step = max(hbm_s, compute_s) + coll_s      # TP psums are in-line, unhidden
+    busy = max(compute_s, 1e-30)
+    return SimResult(
+        step_time=step, compute_s=compute_s, busy_per_stage=[busy],
+        bubble_fraction=1.0 - busy / step if step > 0 else 0.0,
+        p2p_s=0.0, p2p_bytes=0.0, coll_s=coll_s, coll_bytes=coll_bytes,
+        counts={"tok_per_s": R / step if step > 0 else 0.0,
+                "hbm_s": hbm_s, "weight_bytes": weight_bytes,
+                "kv_bytes": kv_bytes, "kv_tokens_read": R * toks_per_seq},
+        peak_live_mb=[0], opt_s=0.0)
+
+
 def simulate(sim: SimConfig, cost: CostModel, *,
              record_timeline: bool = False) -> SimResult:
+    if sim.serving:
+        return _simulate_serving(sim, cost)
     S, M, V = sim.n_stages, sim.n_microbatches, sim.n_chunks
     k_c = sim.layers_per_chunk
     n_g = sim.n_global_chunks

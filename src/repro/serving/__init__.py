@@ -1,0 +1,25 @@
+"""Serving engine: paged KV cache + continuous batching over the model stack.
+
+Layers (bottom up):
+
+  cache.py      the paged KV memory manager: fixed-size blocks in a shared
+                pool, per-request block tables, a free-list ``BlockAllocator``
+                (pure Python, host side) and the jnp pool layout;
+  steps.py      jittable model steps against the paged cache —
+                ``paged_prefill_step`` / ``paged_decode_step`` over the same
+                layer stack as models/transformer.py, plus mesh builders
+                (block table replicated, KV blocks sharded over `model`);
+  scheduler.py  the request lifecycle: arrival queue, block-budget admission,
+                preemption by evicting lowest-priority block tables
+                (continuous vs static batching policies);
+  engine.py     the step loop tying them together: admit -> batched ragged
+                prefill -> one decode step for every live request.
+
+The decode hot path is the Pallas paged-attention kernel
+(kernels/paged_attention.py, registered in kernels/ops.py); the dense
+``[B, H, max_seq, hd]`` cache in models/transformer.py remains the
+training-adjacent eval path.  CLI: ``python -m repro.launch.serve``.
+"""
+from repro.serving.cache import BlockAllocator, PagedCacheConfig, init_paged_cache  # noqa: F401
+from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig  # noqa: F401

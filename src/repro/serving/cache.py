@@ -1,0 +1,125 @@
+"""Paged KV cache: fixed-size blocks, per-request block tables, free list.
+
+The dense serve cache (models/transformer.py ``init_cache``) allocates
+``[B, H, max_seq, hd]`` per layer — every request pays for the longest
+context it *might* reach.  The paged layout stores K/V as ``block_size``-token
+blocks in one shared pool; a request owns ``ceil(len / block_size)`` blocks,
+named by its *block table*.  Memory scales with live tokens (plus tail
+fragmentation < one block per request), which is what lets the scheduler
+admit work by block budget instead of by worst-case sequence length.
+
+Pool layout (mirrors the dense cache's leading per-layer slot dim):
+
+    k, v: [n_slots, num_blocks + 1, Hkv_local, block_size, head_dim]
+
+The ``+ 1`` is the *trash block*: jitted steps have static shapes, so writes
+for padded prompt chunks and idle engine slots are directed at pool index
+``num_blocks`` instead of being predicated out — the block-table gather never
+reads it for a live position.  The allocator hands out ids ``[0, num_blocks)``
+only.
+
+The allocator itself is plain host-side Python (the scheduler runs between
+jitted steps, not inside them): a LIFO free list with O(1) alloc/free and
+hard double-free / foreign-id checks — the invariants test_serving.py
+property-tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models.common import AxisCtx, ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Shape of the paged pool (per device; Hkv is divided by tp outside)."""
+
+    num_blocks: int              # allocatable blocks (pool holds one extra)
+    block_size: int              # tokens per block
+    max_blocks_per_seq: int      # block-table width (max context / block_size)
+
+    @property
+    def trash_block(self) -> int:
+        """Pool index absorbing masked writes; never allocated, never read."""
+        return self.num_blocks
+
+    @property
+    def max_context(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks covering ``n_tokens`` written positions."""
+        return -(-n_tokens // self.block_size)
+
+
+def local_kv_heads(cfg: ModelConfig, tp: int) -> int:
+    """KV heads cached per model shard (1 when the KV heads are replicated
+    and each shard caches its own GQA group — see models/attention.py)."""
+    if tp > 1 and cfg.num_kv_heads % tp == 0:
+        return cfg.num_kv_heads // tp
+    return cfg.num_kv_heads if tp == 1 else 1
+
+
+def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig,
+                     axis: AxisCtx) -> PyTree:
+    """Local (per-shard) paged pool.  Serving supports the attention stack
+    only — SSM/hybrid state is O(1) per request and needs no paging."""
+    assert cfg.block_kind == "attn", \
+        f"paged serving needs block_kind='attn' (got {cfg.block_kind!r})"
+    hkv_l = local_kv_heads(cfg, axis.tp)
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.num_attn_slots(), pcfg.num_blocks + 1, hkv_l,
+             pcfg.block_size, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def kv_bytes_per_token(cfg: ModelConfig, tp: int = 1) -> int:
+    """Per-device K+V bytes cached per token (paged and dense agree on
+    this; they differ in how many tokens they *allocate*)."""
+    return (2 * cfg.num_attn_slots() * local_kv_heads(cfg, tp)
+            * cfg.head_dim * jnp.dtype(cfg.dtype).itemsize)
+
+
+class BlockAllocator:
+    """Free-list allocator over pool ids ``[0, num_blocks)``.
+
+    ``alloc`` is all-or-nothing (returns None when the request cannot be
+    satisfied — the scheduler then preempts or defers); ``free`` rejects
+    double frees and ids it never issued.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))   # LIFO: reuse warm ids
+        self._used: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, ids) -> None:
+        ids = list(ids)
+        for b in ids:
+            if b not in self._used:
+                raise ValueError(f"free of unallocated block {b}")
+        for b in ids:
+            self._used.remove(b)
+            self._free.append(b)

@@ -1,0 +1,181 @@
+"""The serving step loop: admit -> ragged batched prefill -> one decode step.
+
+The engine owns the device state (paged pool, params) and the host state
+(scheduler, block tables as numpy) and advances the world one step at a
+time:
+
+  1. **admit** arrived requests into free slots under the block budget
+     (continuous mode: into the live batch; static mode: only into an
+     empty one);
+  2. **prefill** the newly admitted requests in one right-padded batch —
+     prompt lengths are ragged, so the batch is padded to a power-of-two
+     (rows) x block-multiple power-of-two (length) bucket to bound jit
+     recompilation, padded rows write to the trash block, and each
+     request's first token is read at its true last prompt position;
+  3. **ensure capacity** for every running request's next token write
+     (crossing a block boundary takes a block from the free list, or
+     preempts lower-priority work — scheduler.py);
+  4. **decode** every live slot by one token through the jitted paged
+     decode step (idle slots ride along with ``len == 0``).
+
+Shapes are static per bucket, so the prefill compiles once per bucket and
+the decode exactly once.  Greedy (argmax) sampling; requests finish on EOS
+or their token budget, and their blocks return to the pool.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import AxisCtx, ModelConfig
+from repro.serving import steps
+from repro.serving.cache import init_paged_cache
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+PyTree = Any
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: PyTree, scfg: SchedulerConfig,
+                 *, axis: AxisCtx | None = None,
+                 use_pallas: bool | None = None,
+                 fn_cache: dict | None = None):
+        """``fn_cache``: optional dict shared between engines of the SAME
+        (cfg, axis, use_pallas) so repeated runs (benchmark treatments)
+        reuse the jitted step fns instead of recompiling."""
+        assert cfg.input_mode == "tokens", cfg.input_mode
+        self.cfg = cfg
+        self.params = params
+        self.axis = axis or AxisCtx()
+        self.sched = Scheduler(scfg)
+        self.pcfg = scfg.cache
+        self.cache = init_paged_cache(cfg, self.pcfg, self.axis)
+        self._fns = fn_cache if fn_cache is not None else {}
+        if "decode" not in self._fns:
+            self._fns["decode"] = steps.build_paged_decode_fn(
+                cfg, self.axis, use_pallas=use_pallas)
+        self._decode = self._fns["decode"]
+        self._use_pallas = use_pallas
+        R, maxb = scfg.max_batch, self.pcfg.max_blocks_per_seq
+        self._tables = np.full((R, maxb), self.pcfg.trash_block, np.int32)
+        self._lens = np.zeros((R,), np.int32)
+        self._tokens = np.zeros((R,), np.int32)
+        self.t = 0
+        self.finished: dict[int, Request] = {}
+        self.stats = {"engine_steps": 0, "decode_steps": 0,
+                      "prefill_calls": 0, "prefill_tokens": 0,
+                      "emitted_tokens": 0, "preemptions": 0}
+
+    # -- submission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def submit_all(self, reqs) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # -- prefill ---------------------------------------------------------
+    def _prefill_fn(self):
+        # one builder; jit specializes per (B, S) bucket internally
+        if "prefill" not in self._fns:
+            self._fns["prefill"] = steps.build_paged_prefill_fn(
+                self.cfg, self.axis, use_pallas=self._use_pallas)
+        return self._fns["prefill"]
+
+    def _run_prefill(self, reqs: list[Request]) -> None:
+        bs = self.pcfg.block_size
+        maxb = self.pcfg.max_blocks_per_seq
+        B = _next_pow2(len(reqs))
+        # pow2 bucket, capped at the table width (every context fits it:
+        # submit() rejects anything beyond max_context)
+        S = bs * min(_next_pow2(max(self.pcfg.blocks_for(len(r.context))
+                                    for r in reqs)), maxb)
+        tokens = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        tables = np.full((B, maxb), self.pcfg.trash_block, np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, :len(r.context)] = r.context
+            lens[i] = len(r.context)
+            tables[i, :len(r.blocks)] = r.blocks
+        fn = self._prefill_fn()
+        logits, self.cache = fn(self.params, self.cache,
+                                {"tokens": jnp.asarray(tokens),
+                                 "lens": jnp.asarray(lens)},
+                                jnp.asarray(tables))
+        first = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += int(lens.sum())
+        for i, r in enumerate(reqs):
+            r.cached = len(r.context)
+            self._emit(r, int(first[i]))
+
+    # -- token bookkeeping -----------------------------------------------
+    def _emit(self, req: Request, tok: int) -> None:
+        req.generated.append(tok)
+        req.pending = tok
+        self.stats["emitted_tokens"] += 1
+        if req.done:
+            self.sched.finish(req, self.t)
+            self.finished[req.rid] = req
+
+    def _sync_slots(self) -> None:
+        self._tables[:] = self.pcfg.trash_block
+        self._lens[:] = -1                 # idle-slot marker (see steps.py)
+        self._tokens[:] = 0
+        for r in self.sched.running:
+            self._tables[r.slot, :len(r.blocks)] = r.blocks
+            self._lens[r.slot] = r.cached
+            self._tokens[r.slot] = r.pending if r.pending is not None else 0
+
+    # -- one engine step --------------------------------------------------
+    def step(self) -> dict:
+        now = self.t
+        pre_preempt = self.stats["preemptions"]
+        admitted = self.sched.admit(now)
+        if admitted:
+            self._run_prefill([r for r in admitted])
+        # capacity for every live request's next write, highest priority
+        # first (ensure_block may preempt lower-priority tables)
+        for r in sorted(self.sched.running,
+                        key=lambda r: (-r.priority, r.arrival)):
+            if r.state == "running":          # may have been evicted above
+                self.sched.ensure_block(r)
+        self.stats["preemptions"] = sum(
+            r.preemptions for rs in (self.sched.running, self.sched.waiting,
+                                     self.finished.values()) for r in rs)
+        decoded = 0
+        if self.sched.running:
+            self._sync_slots()
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._tables),
+                jnp.asarray(self._lens), jnp.asarray(self._tokens))
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            for r in list(self.sched.running):
+                r.cached += 1
+                self._emit(r, int(nxt[r.slot]))
+                decoded += 1
+            self.stats["decode_steps"] += 1
+        self.stats["engine_steps"] += 1
+        self.t += 1
+        return {"step": now, "admitted": len(admitted), "decoded": decoded,
+                "running": len(self.sched.running),
+                "waiting": len(self.sched.waiting),
+                "preempted": self.stats["preemptions"] - pre_preempt}
+
+    def run(self, *, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Drive until every submitted request finishes."""
+        while self.sched.has_work:
+            self.step()
+            if self.t > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return {rid: list(r.generated)
+                for rid, r in sorted(self.finished.items())}

@@ -1,0 +1,248 @@
+"""Jittable model steps against the paged KV cache.
+
+Same layer stack as models/transformer.py (one ``lax.scan`` over stacked
+layer params, per-layer window table indexed inside the body), but the KV
+side effects go through block tables into the shared pool:
+
+  * ``paged_prefill_step`` runs full-sequence attention (the training flash
+    kernel) over a right-padded ragged batch and scatters each request's
+    K/V into its table's blocks — padded chunks are routed to the pool's
+    trash block, and the first generated token is read at each request's
+    *true* last prompt position (not position -1 of the padded row);
+  * ``paged_decode_step`` advances every live request by one token: the new
+    K/V lands at ``(table[len // bs], len % bs)`` and attention runs through
+    the Pallas paged kernel (kernels/paged_attention.py) — or its jnp
+    reference when ``use_pallas`` is off.  Sliding-window layers reuse the
+    flash path's trick: one kernel specialisation per static window value
+    in {0, sliding_window}, selected by the traced per-layer table scalar.
+
+Shapes are static (fixed slot count R, fixed table width), so the engine
+compiles each step once; idle slots ride along with ``len == 0`` and write
+to the trash block.
+
+Mesh builders mirror core/stepfn.py: params in serve layout, block tables
+and lengths replicated, KV pool blocks sharded over `model` on the KV-head
+dim, logits vocab-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+from repro.models.common import (AxisCtx, ModelConfig, apply_norm, apply_rope,
+                                 embed_tokens, lm_logits)
+
+PyTree = Any
+
+
+def _write_decode_kv(pool: jnp.ndarray, new: jnp.ndarray, bid: jnp.ndarray,
+                     off: jnp.ndarray) -> jnp.ndarray:
+    """pool: [N+1, H, bs, hd]; new: [R, 1, H, hd]; bid/off: [R]."""
+    return pool.at[bid, :, off, :].set(new[:, 0].astype(pool.dtype))
+
+
+def _write_prefill_kv(pool: jnp.ndarray, kv: jnp.ndarray,
+                      bids_flat: jnp.ndarray) -> jnp.ndarray:
+    """pool: [N+1, H, bs, hd]; kv: [B, H, S, hd]; bids_flat: [B * S/bs]
+    (padded chunks already pointed at the trash block)."""
+    _, H, bs, hd = pool.shape
+    B, _, S, _ = kv.shape
+    tiles = kv.reshape(B, H, S // bs, bs, hd).transpose(0, 2, 1, 3, 4)
+    return pool.at[bids_flat].set(tiles.reshape(-1, H, bs, hd).astype(pool.dtype))
+
+
+def paged_prefill_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                       batch: dict, block_tables: jnp.ndarray, axis: AxisCtx,
+                       *, use_pallas: bool | None = None):
+    """batch: {"tokens": [B, S], "lens": [B]} with S a multiple of the block
+    size and ``lens[r] <= S`` the true prompt lengths.  Returns (logits
+    [B, V_local] at each request's last prompt position, cache).
+    """
+    tokens, lens = batch["tokens"], batch["lens"]
+    x, positions = T.embed_inputs(cfg, params, {"tokens": tokens}, axis)
+    B, S = tokens.shape
+    bs = cache["k"].shape[3]
+    trash = cache["k"].shape[1] - 1
+    nb = S // bs
+    windows, _, _ = T.layer_tables(cfg)
+    li = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    # chunk j of request r is live iff it covers a written position
+    valid = (jnp.arange(nb)[None, :] * bs) < lens[:, None]         # [B, nb]
+    bids_flat = jnp.where(valid, block_tables[:, :nb], trash).reshape(-1)
+
+    def body(carry, xs):
+        x, cache = carry
+        lp, w, slot = xs
+        h = apply_norm(cfg, lp["ln1"], x)
+        d, k, v = attn_mod.attention_train(cfg, lp["attn"], h,
+                                           positions=positions, window=w,
+                                           axis=axis, use_pallas=use_pallas,
+                                           return_kv=True)
+        x = x + d
+        kc = _write_prefill_kv(cache["k"][slot], k, bids_flat)
+        vc = _write_prefill_kv(cache["v"][slot], v, bids_flat)
+        cache["k"] = lax.dynamic_update_index_in_dim(cache["k"], kc, slot, 0)
+        cache["v"] = lax.dynamic_update_index_in_dim(cache["v"], vc, slot, 0)
+        h = apply_norm(cfg, lp["ln2"], x)
+        if cfg.is_moe:
+            delta, _ = moe_mod.apply_moe(cfg, lp["moe"], h, axis)
+        else:
+            delta = mlp_mod.apply_mlp(cfg, lp["mlp"], h, axis)
+        x = x + delta
+        return (x, cache), None
+
+    (x, cache), _ = lax.scan(body, (x, cache), (params["layers"], windows, li))
+    # the satellite fix generalised: gather each request's true last prompt
+    # position, so right-padded ragged prompts yield the right first token
+    last = jnp.maximum(lens - 1, 0)[:, None, None]                  # [B, 1, 1]
+    xl = jnp.take_along_axis(x, jnp.broadcast_to(last, (B, 1, x.shape[-1])),
+                             axis=1)
+    xl = apply_norm(cfg, params["final_norm"], xl)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return lm_logits(cfg, head, xl, axis)[:, 0], cache
+
+
+def paged_decode_step(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                      block_tables: jnp.ndarray, lens: jnp.ndarray,
+                      tokens: jnp.ndarray, axis: AxisCtx,
+                      *, use_pallas: bool | None = None):
+    """One token for every live slot.  tokens/lens: [R]; ``lens[r]`` is the
+    number of tokens already cached (the new token is written at that
+    position and attended to, so ``lens == 0`` decodes against an empty
+    cache).  Slots with ``lens < 0`` are idle: their writes hit the trash
+    block and their logits are garbage to be discarded.
+    Returns (logits [R, V_local], cache).
+
+    Capacity contract: the caller guarantees ``lens[r] // block_size <
+    block_tables.shape[1]`` and that the named block is allocated (the
+    scheduler's ``ensure_block``); gather clamping would otherwise silently
+    redirect the write into the request's own last block.
+    """
+    if use_pallas is None:
+        use_pallas = cfg.kernels
+    R = tokens.shape[0]
+    bs = cache["k"].shape[3]
+    lens = lens.astype(jnp.int32)
+    lens_c = jnp.maximum(lens, 0)
+    x = embed_tokens(cfg, params["embed"], tokens[:, None], axis)   # [R, 1, D]
+    positions = lens_c[:, None]
+    bid = jnp.take_along_axis(block_tables, (lens_c // bs)[:, None],
+                              axis=1)[:, 0]
+    off = lens_c % bs
+    ctx = jnp.where(lens >= 0, lens + 1, 0)
+    windows, _, _ = T.layer_tables(cfg)
+    li = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+
+    def attend(w_static: int):
+        def f(opr):
+            q, kc, vc = opr
+            if use_pallas:
+                from repro.kernels import ops as kops
+                return kops.paged_attention(q, kc, vc, block_tables, ctx,
+                                            window=w_static,
+                                            softcap=cfg.attn_logit_softcap)
+            from repro.kernels.ref import paged_attention_ref
+            y = paged_attention_ref(q, kc, vc, block_tables, ctx,
+                                    window=w_static,
+                                    softcap=cfg.attn_logit_softcap)
+            return jnp.where((ctx > 0)[:, None, None], y, 0.0).astype(q.dtype)
+        return f
+
+    def body(carry, xs):
+        x, cache = carry
+        lp, w, slot = xs
+        h = apply_norm(cfg, lp["ln1"], x)
+        q, k_new, v_new = attn_mod.project_qkv(cfg, lp["attn"], h, axis)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        kc = _write_decode_kv(cache["k"][slot], k_new, bid, off)
+        vc = _write_decode_kv(cache["v"][slot], v_new, bid, off)
+        cache["k"] = lax.dynamic_update_index_in_dim(cache["k"], kc, slot, 0)
+        cache["v"] = lax.dynamic_update_index_in_dim(cache["v"], vc, slot, 0)
+        if cfg.has_window_cache or cfg.sliding_window > 0:
+            # static-window specialisation selected by the traced per-layer
+            # table scalar (values in {0, sliding_window}) — the paged path's
+            # version of the flash kernel's window dispatch
+            y = lax.cond(w > 0, attend(int(cfg.sliding_window)), attend(0),
+                         (q[:, 0], kc, vc))
+        else:
+            y = attend(0)((q[:, 0], kc, vc))
+        y = y.reshape(R, 1, -1)
+        out = jnp.einsum("bsh,hd->bsd", y, lp["attn"]["wo"].astype(y.dtype))
+        x = x + axis.psum_model(out)
+        h = apply_norm(cfg, lp["ln2"], x)
+        if cfg.is_moe:
+            delta, _ = moe_mod.apply_moe(cfg, lp["moe"], h, axis)
+        else:
+            delta = mlp_mod.apply_mlp(cfg, lp["mlp"], h, axis)
+        x = x + delta
+        return (x, cache), None
+
+    (x, cache), _ = lax.scan(body, (x, cache), (params["layers"], windows, li))
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return lm_logits(cfg, head, x, axis)[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Builders (single-device jit and mesh shard_map)
+# ---------------------------------------------------------------------------
+def build_paged_decode_fn(cfg: ModelConfig, axis: AxisCtx | None = None, *,
+                          use_pallas: bool | None = None, donate: bool = True):
+    axis = axis or AxisCtx()
+    fn = functools.partial(paged_decode_step, cfg, axis=axis,
+                           use_pallas=use_pallas)
+    return jax.jit(lambda p, c, bt, ln, tk: fn(p, c, bt, ln, tk),
+                   donate_argnums=(1,) if donate else ())
+
+
+def build_paged_prefill_fn(cfg: ModelConfig, axis: AxisCtx | None = None, *,
+                           use_pallas: bool | None = None, donate: bool = True):
+    axis = axis or AxisCtx()
+    fn = functools.partial(paged_prefill_step, cfg, axis=axis,
+                           use_pallas=use_pallas)
+    return jax.jit(lambda p, c, batch, bt: fn(p, c, batch, bt),
+                   donate_argnums=(1,) if donate else ())
+
+
+def paged_cache_specs(cfg: ModelConfig, axis: AxisCtx) -> PyTree:
+    """Pool sharding: block pool replicated over `data` (requests are not
+    batch-sharded — the block table names blocks, not rows), KV heads over
+    `model` exactly like the dense serve cache."""
+    kv_model = "model" if axis.tp > 1 else None
+    sp = P(None, None, kv_model, None, None)
+    return {"k": sp, "v": sp}
+
+
+def build_paged_serve_step(cfg: ModelConfig, mesh: Mesh, *,
+                           use_pallas: bool | None = None):
+    """Jitted ``serve(params, cache, block_tables, lens, tokens) ->
+    (logits, cache)`` on a (data, model) mesh: block tables/lens/tokens
+    replicated, KV blocks sharded over `model`, logits vocab-sharded."""
+    from repro.core import stepfn
+    base = stepfn.axis_ctx(mesh)
+    expert = "data" if (cfg.is_moe and base.ndata > 1) else None
+    axis = dataclasses.replace(base, expert=expert)
+    fspecs = T.serve_param_specs(cfg, axis.tp)
+    cspecs = paged_cache_specs(cfg, axis)
+
+    def serve(params, cache, block_tables, lens, tokens):
+        return paged_decode_step(cfg, params, cache, block_tables, lens,
+                                 tokens, axis, use_pallas=use_pallas)
+
+    fn = compat.shard_map(serve, mesh=mesh,
+                          in_specs=(fspecs, cspecs, P(None, None), P(None),
+                                    P(None)),
+                          out_specs=(P(None, "model"), cspecs))
+    return jax.jit(fn, donate_argnums=(1,))

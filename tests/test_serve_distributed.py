@@ -95,6 +95,51 @@ def test_prefill_matches_single_device(mesh22):
                                rtol=3e-3, atol=3e-3)
 
 
+def test_paged_decode_matches_single_device(mesh22):
+    """Paged serving on the (data=2, model=2) mesh: block tables replicated,
+    KV blocks sharded over `model` on the KV-head dim — pins the serve
+    shardings of the paged pool (serving/steps.py paged_cache_specs)."""
+    from repro.serving import steps as sv_steps
+    from repro.serving.cache import PagedCacheConfig, init_paged_cache
+
+    cfg = CFG
+    key = jax.random.PRNGKey(0)
+    R, S = 4, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (R, S), 0, cfg.vocab_size)
+    pcfg = PagedCacheConfig(num_blocks=2 * R, block_size=4,
+                            max_blocks_per_seq=2)
+    tables = jnp.arange(2 * R, dtype=jnp.int32).reshape(R, 2)
+
+    # single-device paged reference chain
+    params_ref = T.init_params(cfg, key)
+    pool = init_paged_cache(cfg, pcfg, AxisCtx())
+    dec = sv_steps.build_paged_decode_fn(cfg, AxisCtx(), donate=False)
+    ref = []
+    for t in range(S):
+        lg, pool = dec(params_ref, pool, tables,
+                       jnp.full((R,), t, jnp.int32), toks[:, t])
+        ref.append(lg)
+    ref = jnp.stack(ref, 1)
+
+    # distributed: pool blocks sharded over `model`, tables/lens replicated
+    params, _ = _params_on_mesh(cfg, mesh22, key)
+    axis = stepfn.axis_ctx(mesh22)
+    local = jax.eval_shape(lambda: init_paged_cache(cfg, pcfg, axis))
+    cspecs = sv_steps.paged_cache_specs(cfg, axis)
+    gshapes = stepfn.globalize(local, cspecs, mesh22)
+    pool_d = jax.tree.map(
+        lambda l: jnp.zeros(l.shape, l.dtype, device=l.sharding), gshapes)
+    serve = sv_steps.build_paged_serve_step(cfg, mesh22)
+    out = []
+    for t in range(S):
+        lg, pool_d = serve(params, pool_d, tables,
+                           jnp.full((R,), t, jnp.int32), toks[:, t])
+        out.append(lg)
+    out = jnp.stack(out, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-3, atol=3e-3)
+
+
 def test_long_decode_seq_sharded_cache(mesh22):
     """Sequence-parallel KV cache (long_500k path): decode matches the
     replicated-cache reference after a populated prefix."""

@@ -1,0 +1,315 @@
+"""Serving engine tests: paged-attention parity with the dense decode path,
+block-allocator invariants, and continuous-batching end-to-end equivalence
+with per-request sequential decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.ref import paged_attention_ref
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig
+from repro.serving import steps
+from repro.serving.cache import BlockAllocator, PagedCacheConfig, init_paged_cache
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+CFG = ModelConfig(name="sv", arch_type="dense", num_layers=3, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", param_dtype="float32")
+AXIS = AxisCtx()
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (5, 0.0), (0, 20.0),
+                                            (7, 30.0)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)],
+                         ids=["mha", "gqa", "mqa"])
+def test_paged_kernel_matches_ref(window, softcap, hq, hkv):
+    key = jax.random.PRNGKey(0)
+    R, D, bs, N, maxb = 5, 16, 8, 12, 4
+    q = jax.random.normal(key, (R, hq, D))
+    kp = jax.random.normal(jax.random.fold_in(key, 1), (N, hkv, bs, D))
+    vp = jax.random.normal(jax.random.fold_in(key, 2), (N, hkv, bs, D))
+    bt = jax.random.randint(jax.random.fold_in(key, 3), (R, maxb), 0, N)
+    # odd context lengths: partial tail blocks, single token, full table
+    lens = jnp.array([1, 5, 17, 23, 32], jnp.int32)
+    out = kops.paged_attention(q, kp, vp, bt, lens, window=window,
+                               softcap=softcap)
+    ref = paged_attention_ref(q, kp, vp, bt, lens, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_paged_kernel_idle_rows_zero():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (3, 4, 16))
+    kp = jax.random.normal(key, (6, 2, 8, 16))
+    bt = jnp.zeros((3, 2), jnp.int32)
+    lens = jnp.array([0, 3, 0], jnp.int32)
+    out = kops.paged_attention(q, kp, kp, bt, lens)
+    assert bool(jnp.all(out[0] == 0)) and bool(jnp.all(out[2] == 0))
+    assert bool(jnp.any(out[1] != 0))
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: paged decode chain vs the dense-cache decode path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [
+    CFG,
+    dataclasses.replace(CFG, name="sv-mqa", num_kv_heads=1),
+    dataclasses.replace(CFG, name="sv-win", sliding_window=4,
+                        local_global_period=2, attn_logit_softcap=30.0),
+], ids=["gqa", "mqa", "window-softcap"])
+@pytest.mark.parametrize("use_pallas", [True, False],
+                         ids=["pallas", "ref"])
+def test_paged_decode_matches_dense(cfg, use_pallas):
+    key = jax.random.PRNGKey(0)
+    B, S = 3, 10
+    params = T.init_params(cfg, key)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    cache = T.init_cache(cfg, B, S, AXIS)
+    ref = []
+    for t in range(S):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, t], AXIS)
+        ref.append(lg)
+    ref = jnp.stack(ref, 1)
+
+    # odd block count: 10 tokens over 3 blocks of 4
+    pcfg = PagedCacheConfig(num_blocks=3 * B, block_size=4,
+                            max_blocks_per_seq=3)
+    pool = init_paged_cache(cfg, pcfg, AXIS)
+    tables = jnp.arange(3 * B, dtype=jnp.int32).reshape(B, 3)
+    dec = steps.build_paged_decode_fn(cfg, AXIS, use_pallas=use_pallas,
+                                      donate=False)
+    out = []
+    for t in range(S):
+        lg, pool = dec(params, pool, tables, jnp.full((B,), t, jnp.int32),
+                       toks[:, t])
+        out.append(lg)
+    out = jnp.stack(out, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_paged_prefill_ragged_first_token():
+    """Right-padded ragged prefill: logits come from each request's true
+    last prompt position (the examples/serve.py first-token fix)."""
+    cfg = CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    lens = [3, 7, 12]
+    B, S = len(lens), 12                    # multiple of the block size
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+    # table width 4: the longest prompt (12 = 3 full blocks) still needs a
+    # fourth block for its first decoded token
+    pcfg = PagedCacheConfig(num_blocks=B * 4, block_size=4,
+                            max_blocks_per_seq=4)
+    pool = init_paged_cache(cfg, pcfg, AXIS)
+    tables = jnp.arange(B * 4, dtype=jnp.int32).reshape(B, 4)
+    pre = steps.build_paged_prefill_fn(cfg, AXIS, donate=False)
+    lg, pool = pre(params, pool, {"tokens": toks,
+                                  "lens": jnp.asarray(lens, jnp.int32)},
+                   tables)
+    for b, L in enumerate(lens):
+        c = T.init_cache(cfg, 1, L, AXIS)
+        batch = {"tokens": toks[b:b + 1, :L],
+                 "labels": jnp.zeros((1, L), jnp.int32),
+                 "mask": jnp.ones((1, L), jnp.int32)}
+        want, _ = T.prefill_step(cfg, params, c, batch, AXIS)
+        np.testing.assert_allclose(np.asarray(lg[b]), np.asarray(want[0]),
+                                   atol=1e-5, rtol=1e-5)
+    # and decoding continues correctly from the ragged prefill
+    dec = steps.build_paged_decode_fn(cfg, AXIS, donate=False)
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg2, pool = dec(params, pool, tables, jnp.asarray(lens, jnp.int32), nxt)
+    for b, L in enumerate(lens):
+        c = T.init_cache(cfg, 1, L + 1, AXIS)
+        batch = {"tokens": toks[b:b + 1, :L],
+                 "labels": jnp.zeros((1, L), jnp.int32),
+                 "mask": jnp.ones((1, L), jnp.int32)}
+        _, c = T.prefill_step(cfg, params, c, batch, AXIS)
+        want, _ = T.decode_step(cfg, params, c, nxt[b:b + 1], AXIS)
+        np.testing.assert_allclose(np.asarray(lg2[b]), np.asarray(want[0]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Block allocator invariants
+# ---------------------------------------------------------------------------
+def test_allocator_basics():
+    a = BlockAllocator(4)
+    got = a.alloc(3)
+    assert len(got) == 3 and a.available == 1
+    assert a.alloc(2) is None               # all-or-nothing
+    a.free(got[:2])
+    assert a.available == 3
+    with pytest.raises(ValueError):
+        a.free(got[:1] + got[:1])           # double free in one call
+    a.free(got[2:])
+    with pytest.raises(ValueError):
+        a.free(got[2:])                     # double free across calls
+    assert a.available == 4
+
+
+def test_allocator_properties():
+    """Random alloc/free interleavings: ids unique while held, capacity
+    conserved, frees restore it exactly."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+                    max_size=60))
+    def run(ops):
+        cap = 12
+        a = BlockAllocator(cap)
+        held: list[int] = []
+        for is_alloc, n in ops:
+            if is_alloc:
+                got = a.alloc(n)
+                if n > cap - len(held):
+                    assert got is None
+                else:
+                    assert got is not None and len(got) == n
+                    assert not set(got) & set(held)       # never double-issued
+                    held.extend(got)
+            elif held:
+                k = min(n, len(held))
+                a.free(held[:k])
+                del held[:k]
+            assert a.available == cap - len(held)
+            assert a.used == len(held)
+        a.free(held)
+        assert a.available == cap
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching end-to-end
+# ---------------------------------------------------------------------------
+def _sequential_reference(cfg, params, prompt, n_new):
+    """Per-request greedy decode through the dense prefill/decode path."""
+    c = T.init_cache(cfg, 1, len(prompt) + n_new + 1, AXIS)
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32),
+             "labels": jnp.zeros((1, len(prompt)), jnp.int32),
+             "mask": jnp.ones((1, len(prompt)), jnp.int32)}
+    lg, c = T.prefill_step(cfg, params, c, batch, AXIS)
+    outs = [int(jnp.argmax(lg, -1)[0])]
+    for _ in range(n_new - 1):
+        lg, c = T.decode_step(cfg, params, c,
+                              jnp.asarray([outs[-1]], jnp.int32), AXIS)
+        outs.append(int(jnp.argmax(lg, -1)[0]))
+    return outs
+
+
+def test_continuous_batching_matches_sequential():
+    """Staggered arrivals through the engine emit exactly the tokens each
+    request would get from a sequential dense decode of its own."""
+    cfg = CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    specs = [(5, 6, 0), (8, 5, 1), (3, 7, 2), (11, 4, 4), (2, 8, 5)]
+    reqs = [Request(rid=i, prompt=tuple(int(x) for x in
+                                        rng.integers(0, cfg.vocab_size, pl)),
+                    max_new_tokens=mn, arrival=arr)
+            for i, (pl, mn, arr) in enumerate(specs)]
+    pcfg = PagedCacheConfig(num_blocks=32, block_size=4, max_blocks_per_seq=5)
+    eng = ServingEngine(cfg, params,
+                        SchedulerConfig(cache=pcfg, max_batch=3))
+    eng.submit_all(reqs)
+    got = eng.run(max_steps=500)
+    assert sorted(got) == list(range(len(specs)))
+    for r in reqs:
+        want = _sequential_reference(cfg, params, list(r.prompt),
+                                     r.max_new_tokens)
+        assert got[r.rid] == want, (r.rid, got[r.rid], want)
+    assert eng.sched.alloc.used == 0        # every block returned
+
+
+def test_eos_stops_generation():
+    cfg = CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    seq = _sequential_reference(cfg, params, [1, 2, 3, 4], 8)
+    pcfg = PagedCacheConfig(num_blocks=8, block_size=4, max_blocks_per_seq=4)
+
+    def run(eos):
+        eng = ServingEngine(cfg, params,
+                            SchedulerConfig(cache=pcfg, max_batch=2))
+        eng.submit(Request(rid=0, prompt=(1, 2, 3, 4), max_new_tokens=8,
+                           eos_id=eos))
+        return eng.run(max_steps=100)[0]
+
+    assert run(seq[0]) == seq[:1]           # stop on the very first token
+    unused = next(t for t in range(cfg.vocab_size) if t not in seq)
+    assert run(unused) == seq               # EOS never sampled: full budget
+
+
+def test_preemption_under_block_pressure():
+    """A pool too small for all live contexts forces eviction; everything
+    still completes and the allocator drains."""
+    cfg = dataclasses.replace(CFG, num_layers=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pcfg = PagedCacheConfig(num_blocks=7, block_size=4, max_blocks_per_seq=4)
+    eng = ServingEngine(cfg, params,
+                        SchedulerConfig(cache=pcfg, max_batch=3))
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=(1 + i, 2 + i, 3 + i, 4 + i),
+                           max_new_tokens=8, arrival=0))
+    got = eng.run(max_steps=500)
+    assert sorted(got) == [0, 1, 2]
+    assert all(len(v) == 8 for v in got.values())
+    assert eng.stats["preemptions"] > 0
+    assert eng.sched.alloc.used == 0
+    assert eng.sched.alloc.available == 7
+
+
+def test_prefill_bucket_capped_at_table_width():
+    """A prompt needing a non-power-of-two block count (5 of 5) must not be
+    bucketed past max_blocks_per_seq (regression: the pow2 bucket produced
+    an 8-block pad against a 5-wide table)."""
+    cfg = dataclasses.replace(CFG, num_layers=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pcfg = PagedCacheConfig(num_blocks=16, block_size=8, max_blocks_per_seq=5)
+    eng = ServingEngine(cfg, params,
+                        SchedulerConfig(cache=pcfg, max_batch=2))
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=tuple(int(x) for x in
+                                           rng.integers(0, cfg.vocab_size, 33)),
+                       max_new_tokens=4))
+    got = eng.run(max_steps=50)
+    assert len(got[0]) == 4
+    want = _sequential_reference(cfg, params, list(eng.finished[0].prompt), 4)
+    assert got[0] == want
+
+
+def test_submit_rejects_unservable_requests():
+    pcfg = PagedCacheConfig(num_blocks=2, block_size=4, max_blocks_per_seq=8)
+    s = Scheduler(SchedulerConfig(cache=pcfg, max_batch=2))
+    with pytest.raises(ValueError):        # exceeds the table capacity
+        s.submit(Request(rid=0, prompt=tuple(range(30)), max_new_tokens=8))
+    with pytest.raises(ValueError):        # bigger than the whole pool
+        s.submit(Request(rid=1, prompt=(1, 2, 3, 4), max_new_tokens=8))
+
+
+def test_scheduler_static_mode_drains_before_admitting():
+    pcfg = PagedCacheConfig(num_blocks=16, block_size=4, max_blocks_per_seq=4)
+    s = Scheduler(SchedulerConfig(cache=pcfg, max_batch=4, mode="static"))
+    for i in range(3):
+        s.submit(Request(rid=i, prompt=(1, 2, 3), max_new_tokens=4,
+                         arrival=0))
+    first = s.admit(0)
+    assert len(first) == 3
+    s.submit(Request(rid=9, prompt=(1, 2), max_new_tokens=2, arrival=0))
+    assert s.admit(1) == []                 # batch still live: no admission
+    for r in list(s.running):
+        s.finish(r, 2)
+    assert [r.rid for r in s.admit(3)] == [9]
