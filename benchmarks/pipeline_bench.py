@@ -1,0 +1,88 @@
+"""Pipeline train-step benchmark: replicated vs ZeRO-partitioned modular
+pipeline on the (stage=2, data=2) virtual-device mesh.
+
+Times whole jitted ``build_pipeline_train_step`` steps (grad + clip + AdamW)
+for both layer-storage layouts, plus the roofline-traced collective counts
+that separate them: the partitioned layout pays K data-axis all_gathers per
+pass (the layered-accumulation frequency, drain rounds issue none) and gets
+back a 1/n_data training-state footprint.  CPU wall-clock is not TPU
+wall-clock; the *structure* (collective counts, bytes, state size) is what
+this bench pins as a CI artifact (BENCH_pipeline.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _median_us(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)                   # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def bench_pipeline():
+    from repro import compat
+    from repro.core import roofline, stepfn
+    from repro.core.schedules import PipeSpec
+    from repro.models.common import ModelConfig
+    from repro.optim.adam import AdamConfig, adam_init
+
+    cfg = ModelConfig(name="pb", arch_type="dense", num_layers=8, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      dtype="float32", param_dtype="float32")
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
+    M = 8
+    spec = PipeSpec(n_stages=2, layers_per_stage=4, n_microbatches=M,
+                    schedule="modular")
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (M, 4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1),
+             "mask": jnp.ones_like(toks)}
+
+    rows = []
+    for part in (False, True):
+        name = "partitioned" if part else "replicated"
+        step = stepfn.build_pipeline_train_step(
+            cfg, mesh, spec, AdamConfig(lr=1e-3), partitioned=part,
+            donate=False)
+        storage = stepfn.init_pipeline_storage(cfg, mesh, key, spec,
+                                               partitioned=part)
+        opt = adam_init(storage)
+        us = _median_us(step, storage, opt, batch)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (storage, opt, batch))
+        c = roofline.analyze(step, *shapes, mesh=mesh)
+        data_gathers = sum(v for (ax, nm), v in c.coll_counts.items()
+                           if "gather" in nm and ax == "data")
+        # ZeRO's win is the PER-DEVICE layer-state footprint (1/n_data)
+        layer_state_dev = sum(
+            x.addressable_shards[0].data.size * x.dtype.itemsize
+            for x in jax.tree.leaves(storage["layers"]))
+        rows.append({
+            "layout": name,
+            "step_us": int(us),
+            "loss0": float(step(storage, opt, batch)[2]["loss"]),
+            "data_all_gathers": int(data_gathers),
+            "data_coll_bytes": int(c.coll_bytes.get("data", 0)),
+            "stage_p2p_bytes": int(c.coll_bytes.get("stage", 0)),
+            "layer_state_bytes_per_device": int(layer_state_dev),
+        })
+    repl, zero = rows
+    return rows, {
+        "partitioned_over_replicated_step": round(
+            zero["step_us"] / max(repl["step_us"], 1), 3),
+        "gathers_per_pass": zero["data_all_gathers"],
+        "per_device_state_ratio": round(
+            zero["layer_state_bytes_per_device"]
+            / max(repl["layer_state_bytes_per_device"], 1), 3),
+    }

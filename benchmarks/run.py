@@ -31,8 +31,8 @@ def main() -> None:
                     help="comma-separated bench names to run")
     args = ap.parse_args()
 
-    from benchmarks import (kernels_bench, paper_tables, planner_bench,
-                            serving_bench, system_benches)
+    from benchmarks import (kernels_bench, paper_tables, pipeline_bench,
+                            planner_bench, serving_bench, system_benches)
 
     benches = [
         ("table_6_1_fastest_configs", paper_tables.table_6_1),
@@ -47,6 +47,7 @@ def main() -> None:
         ("planner", planner_bench.bench_planner),
         ("kernels", kernels_bench.bench_kernels_suite),
         ("serving", serving_bench.bench_serving),
+        ("pipeline", pipeline_bench.bench_pipeline),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

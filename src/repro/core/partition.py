@@ -37,12 +37,25 @@ def _is_spec(x) -> bool:
 from repro.compat import match_vma, pvary_missing  # noqa: F401  (re-export)
 
 
-def local_shape(global_shape: tuple[int, ...], spec: P, tp: int) -> tuple[int, ...]:
-    """Model-local shape of a leaf under tensor parallelism."""
+def local_shape(global_shape: tuple[int, ...], spec: P, tp: int, *,
+                path=None) -> tuple[int, ...]:
+    """Model-local shape of a leaf under tensor parallelism.
+
+    ``path`` (an optional jax tree path) is only used to make the error
+    message name the offending leaf — a bare assert here used to surface as
+    an anonymous AssertionError from deep inside spec construction.
+    """
     dims = list(global_shape)
     for i, ax in enumerate(spec):
         if ax == "model":
-            assert dims[i] % tp == 0, (global_shape, spec, tp)
+            if dims[i] % tp != 0:
+                where = (f" at leaf {jax.tree_util.keystr(tuple(path))}"
+                         if path else "")
+                raise ValueError(
+                    f"tensor-parallel width tp={tp} does not divide dim {i} "
+                    f"(size {dims[i]}) of global shape {tuple(global_shape)}"
+                    f"{where} (spec {spec}); pad the config with "
+                    f"ModelConfig.padded_for_tp or pick a tp that divides it")
             dims[i] //= tp
     return tuple(dims)
 
@@ -181,7 +194,7 @@ def partitioned_shapes(template: PyTree, specs: PyTree, n_data: int,
         if expert_resident and is_expert_path(path):
             return jax.ShapeDtypeStruct(leaf.shape, jnp.float32)
         stacked = is_stacked_path(path)
-        lshape = local_shape(leaf.shape, spec, tp)
+        lshape = local_shape(leaf.shape, spec, tp, path=path)
         n_model = 1 if model_replicated(spec) else tp
         if stacked:
             L = lshape[0]

@@ -82,6 +82,26 @@ def stage_param_specs(cfg: ModelConfig, tp: int) -> PyTree:
     return dict({k: v for k, v in base.items() if k != "layers"}, layers=layers)
 
 
+def partitioned_stage_param_specs(cfg: ModelConfig, tp: int) -> PyTree:
+    """Specs for the ZeRO-partitioned pipeline storage: layer leaves are
+    ``[S, K, n_model, n_data, chunk]`` fp32 chunk stacks — the stage-leading
+    analogue of ``partition.partitioned_specs`` (every leaf carries an
+    ``n_model`` dim so the layout is uniform across model-sharded and
+    model-replicated leaves).  Outer leaves keep their full compute specs
+    (they are small and stage-replicated)."""
+    from repro.core import partition as zp
+
+    base = T.param_specs(cfg, tp)
+
+    def conv(s):
+        m = None if zp.model_replicated(s) else "model"
+        return P("stage", None, m, "data", None)
+
+    layers = jax.tree.map(conv, T.layer_specs(cfg, tp),
+                          is_leaf=lambda x: isinstance(x, P))
+    return dict({k: v for k, v in base.items() if k != "layers"}, layers=layers)
+
+
 # ---------------------------------------------------------------------------
 # The pipelined loss
 # ---------------------------------------------------------------------------
@@ -209,27 +229,64 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
     appendix C.2).  Backward-mode AD transposes the gathers into one
     reduce-scatter per layer automatically.
 
-    params["layers"] leaves: [K, 1, n_data, chunk] fp32 storage chunks
-    (stage-local); requires schedule == "modular".
+    Composition with tensor parallelism (the paper's "fastest 3d parallel
+    settings"): chunks store the *model-local* shard of each leaf, so the
+    per-round all_gather runs over `data` only and restores the model-local
+    bf16 tensor — exactly what the Megatron-sharded layer compute consumes.
+    On pre-vma JAX the in-block model-replicated leaves (MoE router, mamba
+    B/C, rwkv mixes) get an explicit ``compat.tp_entry_mark`` on the gathered
+    weight: its transpose is the model-axis psum that completes their partial
+    gradients, so AD still collapses the whole reduction into one per-layer
+    reduce-scatter (over `data`) plus the Megatron-f psum (over `model`).
+
+    params["layers"] leaves: [1, K, n_model, n_data, chunk] fp32 storage
+    chunks (stage-local; inside shard_map the n_model/n_data dims are 1);
+    ``layer_template`` holds the *global* per-layer shapes.  Requires
+    schedule == "modular".
     """
     from repro.core import partition as zp
+    from repro.core.accumulation import _needs_pre_vma_model_psum
 
     assert spec.schedule == "modular"
     windows, flags, _ = T.layer_tables(cfg)
     S, K, M = spec.n_stages, spec.layers_per_stage, spec.n_microbatches
     fwd_perm = [(i, (i + 1) % S) for i in range(S)]
     dtype = jnp.dtype(cfg.dtype)
+    lspecs = T.layer_specs(cfg, axis.tp)
 
     def gather_round(chunks_r):
-        """[1, n_data, chunk] leaves -> bf16 layer params (data-varying)."""
-        def g(tmpl, c):
-            full = zp.gather_local(c, axis.data, tmpl.shape, dtype,
-                                   stacked=False)
-            return pvary_missing(full, (axis.data, axis.pod))
-        return jax.tree.map(g, layer_template, chunks_r)
+        """[1, 1, chunk] leaves -> bf16 model-local layer params."""
+        def g(path, tmpl, sp, c):
+            full = zp.gather_local(
+                c, axis.data, zp.local_shape(tmpl.shape, sp, axis.tp,
+                                             path=path),
+                dtype, stacked=False)
+            full = pvary_missing(full, (axis.data, axis.pod))
+            if _needs_pre_vma_model_psum(path, axis):
+                full = compat.tp_entry_mark(full, axis.model)
+            return full
+        return jax.tree_util.tree_map_with_path(g, layer_template, lspecs,
+                                                chunks_r)
+
+    def zeros_round():
+        """Round-(-1) double-buffer seed, typed like a gather_round output."""
+        def z(path, tmpl, sp):
+            x = pvary_missing(
+                jnp.zeros(zp.local_shape(tmpl.shape, sp, axis.tp, path=path),
+                          dtype),
+                (stage_axis, axis.data, axis.pod))
+            if _needs_pre_vma_model_psum(path, axis):
+                x = compat.tp_entry_mark(x, axis.model)
+            return x
+        return jax.tree_util.tree_map_with_path(z, layer_template, lspecs)
 
     def loss_fn(params, batch):
         s = lax.axis_index(stage_axis)
+        # outer leaves are fp32 master storage; compute in cfg.dtype (same
+        # cast the non-pipeline partitioned path does in gather_outer)
+        params = dict({k: jax.tree.map(lambda x: x.astype(dtype), v)
+                       for k, v in params.items() if k != "layers"},
+                      layers=params["layers"])
         shared = params.get("shared", {})
 
         def embed_one(_, mb):
@@ -270,21 +327,26 @@ def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
 
         def round_step(carry, r):
             buf_in, buf_out, w_cur = carry
-            rc = jnp.minimum(r, K - 1)
-            # local chunk leaves are [1(stage), K, 1(data), chunk]
+            # local chunk leaves are [1(stage), K, 1(model), 1(data), chunk]
             w_next = gather_round(
-                jax.tree.map(lambda p: p[0, rc][None], params["layers"]))
+                jax.tree.map(lambda p: p[0, r], params["layers"]))
             ticks = r * M + jnp.arange(M)
             (buf_in, buf_out, _, _, _), _ = compat.scan(
-                tick, (buf_in, buf_out, w_cur, w_next, rc), ticks)
+                tick, (buf_in, buf_out, w_cur, w_next, r), ticks)
             return (buf_in, buf_out, w_next), None
 
-        w0 = jax.tree.map(lambda t: pvary_missing(
-            jnp.zeros(t.shape, dtype), vary_axes), layer_template)
-        n_rounds = (spec.total_outer_steps + M - 1) // M
-        (buf_in, buf_out, _), _ = compat.scan(
-            round_step, (buf_in, buf_out, w0),
-            jnp.arange(n_rounds))
+        # Main rounds 0..K-1 gather their layer once each (= K all_gathers
+        # per leaf per pass, the layered-accumulation frequency).  The S-1
+        # drain ticks only flush in-flight activations to the loss stage:
+        # every stage still busy there is in round K-1, so they reuse the
+        # last round's weights instead of re-issuing the round-(K-1) gather
+        # once per drain round (jaxpr-pinned in tests/test_pipeline.py).
+        (buf_in, buf_out, w_last), _ = compat.scan(
+            round_step, (buf_in, buf_out, zeros_round()), jnp.arange(K))
+        if S > 1:
+            drain = K * M + jnp.arange(S - 1)
+            (buf_in, buf_out, _, _, _), _ = compat.scan(
+                tick, (buf_in, buf_out, w_last, w_last, K - 1), drain)
 
         n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
         if axis.data:
@@ -315,8 +377,10 @@ def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
     """grad_fn(params, batch) -> (grads, metrics) with ZeRO-chunked layers.
 
     Layer gradients come out of AD already reduce-scattered (the transpose
-    of the per-round gather); only the small stage-replicated outer leaves
-    need the explicit data-axis psum.
+    of the per-round gather), with the pre-vma model-axis completion psums
+    for in-block replicated leaves inserted by the ``tp_entry_mark`` on the
+    gathered weights; only the small stage-replicated outer leaves need the
+    explicit data-axis psum (and reduction-time completion).
     """
     loss_fn = make_partitioned_pipeline_loss(cfg, axis, spec, layer_template,
                                              stage_axis=stage_axis,
@@ -332,14 +396,24 @@ def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
         (loss, (nll, ntok)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(varied, batch)
         from repro.core.accumulation import _complete_block_replicated_grads
-        grads = _complete_block_replicated_grads(grads, axis)
+        # layer-chunk grads arrive complete (tp_entry_mark transpose); only
+        # the outer leaves still follow the reduction-time completion pattern
+        grads = dict(_complete_block_replicated_grads(
+            {k: v for k, v in grads.items() if k != "layers"}, axis),
+            layers=grads["layers"])
         if axis.data:
             nll = lax.psum(nll, axis.data)
         if axis.pod:
             nll = lax.psum(nll, axis.pod)
 
         def reduce(g):
+            # outer leaves are stage-replicated but their AD partials live on
+            # the stages that used them (loss stage for embed/head, every
+            # stage for `shared`): the stage psum completes them so all
+            # stages hold identical outer grads — required for consistent
+            # grad-norm clipping and replicated optimizer updates.
             g = g.astype(jnp.float32)
+            g = lax.psum(g, stage_axis)
             if axis.data:
                 g = lax.psum(g, axis.data)
             if axis.pod:
@@ -356,22 +430,84 @@ def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
     return grad_fn
 
 
-def to_partitioned_stage_stack(layers: PyTree, spec: PipeSpec,
-                               n_data: int) -> PyTree:
-    """Global [L, ...] stacks -> [S, K, n_data, chunk] fp32 ZeRO chunks
-    (storage layout for make_partitioned_pipeline_*; shard with
-    P("stage", None, "data", None))."""
+def to_partitioned_stage_stack(layers: PyTree, spec: PipeSpec, n_data: int,
+                               *, lspecs: PyTree | None = None,
+                               tp: int = 1) -> PyTree:
+    """Global [L, ...] stacks -> [S, K, n_model, n_data, chunk] fp32 ZeRO
+    chunks (storage layout for make_partitioned_pipeline_*; shard with
+    partitioned_stage_param_specs).
+
+    ``lspecs`` (T.layer_specs(cfg, tp), no stacking dim) + ``tp`` make the
+    layout tensor-parallel aware: a model-sharded leaf is split along its
+    'model' spec dim first, so slot [s, k, m, d, :] holds the d-th data
+    chunk of model shard m — the model-local flattening the per-round
+    data-only all_gather restores.  tp == 1 keeps every leaf in one
+    (replicated) model slot.
+    """
     import math as _math
+    from repro.core import partition as zp
+
     staged = to_stage_stack(layers, spec)   # [S, K, ...]
+    if lspecs is None:
+        lspecs = jax.tree.map(lambda x: P(), staged)
 
-    def conv(x):
+    def conv(x, sp):
         S_, K_ = x.shape[:2]
-        flat = x.astype(jnp.float32).reshape(S_, K_, -1)
+        x = x.astype(jnp.float32)
+        m_dim = next((i for i, ax in enumerate(tuple(sp)) if ax == "model"),
+                     None)
+        if tp > 1 and m_dim is not None:
+            d = 2 + m_dim                       # past the [S, K] lead dims
+            assert x.shape[d] % tp == 0, (x.shape, sp, tp)
+            x = x.reshape(*x.shape[:d], tp, x.shape[d] // tp, *x.shape[d + 1:])
+            x = jnp.moveaxis(x, d, 2)           # [S, K, tp, ...local dims...]
+            n_model = tp
+        else:
+            x = x[:, :, None]                   # [S, K, 1, ...]
+            n_model = 1
+        flat = x.reshape(S_, K_, n_model, -1)
         c = _math.ceil(flat.shape[-1] / n_data)
-        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, c * n_data - flat.shape[-1])))
-        return flat.reshape(S_, K_, n_data, c)
+        flat = jnp.pad(flat,
+                       ((0, 0), (0, 0), (0, 0), (0, c * n_data - flat.shape[-1])))
+        return flat.reshape(S_, K_, n_model, n_data, c)
 
-    return jax.tree.map(conv, staged)
+    return jax.tree.map(conv, staged, lspecs)
+
+
+def from_partitioned_stage_stack(chunks: PyTree, spec: PipeSpec,
+                                 layer_template: PyTree, *,
+                                 lspecs: PyTree | None = None,
+                                 tp: int = 1) -> PyTree:
+    """[S, K, n_model, n_data, chunk] fp32 chunks -> global [L, ...] stacks
+    (the exact inverse of ``to_partitioned_stage_stack``; drops the chunk
+    padding).  ``layer_template`` holds the global per-layer shapes."""
+    import math as _math
+
+    if lspecs is None:
+        lspecs = jax.tree.map(lambda _: P(), layer_template)
+
+    def conv(c, tmpl, sp):
+        S_, K_, n_model = c.shape[:3]
+        shape = tuple(tmpl.shape)
+        m_dim = next((i for i, ax in enumerate(tuple(sp)) if ax == "model"),
+                     None)
+        if n_model > 1 and m_dim is not None:
+            lshape = tuple(d // tp if i == m_dim else d
+                           for i, d in enumerate(shape))
+        else:
+            lshape = shape
+        numel = _math.prod(lshape)
+        flat = c.reshape(S_, K_, n_model, -1)[..., :numel]
+        x = flat.reshape(S_, K_, n_model, *lshape)
+        if n_model > 1 and m_dim is not None:
+            x = jnp.moveaxis(x, 2, 2 + m_dim)
+            x = x.reshape(S_, K_, *shape)
+        else:
+            x = x.reshape(S_, K_, *shape)
+        return x
+
+    staged = jax.tree.map(conv, chunks, layer_template, lspecs)
+    return from_stage_stack(staged, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -399,7 +535,19 @@ def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
         if axis.pod:
             nll = lax.psum(nll, axis.pod)
 
-        def reduce(g):
+        def reduce_outer(g):
+            # complete the stage-replicated outer leaves across stages (see
+            # make_partitioned_pipeline_grad_fn.reduce — embed/head partials
+            # live on the loss stage, `shared` partials on every stage)
+            g = g.astype(jnp.float32)
+            g = lax.psum(g, stage_axis)
+            if axis.data:
+                g = lax.psum(g, axis.data)
+            if axis.pod:
+                g = lax.psum(g, axis.pod)
+            return g
+
+        def reduce_layer(g):
             g = g.astype(jnp.float32)
             if axis.data:
                 g = lax.psum(g, axis.data)
@@ -407,7 +555,10 @@ def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
                 g = lax.psum(g, axis.pod)
             return g
 
-        grads = jax.tree.map(reduce, grads)
+        grads = dict(
+            {k: jax.tree.map(reduce_outer, v)
+             for k, v in grads.items() if k != "layers"},
+            layers=jax.tree.map(reduce_layer, grads["layers"]))
         metrics = {"loss": nll / ntok, "ntok": ntok}
         return grads, metrics
 

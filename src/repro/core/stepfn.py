@@ -318,6 +318,135 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh):
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def build_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, spec,
+                              opt_cfg: AdamConfig, *, partitioned: bool = True,
+                              donate: bool = True, remat: bool = True):
+    """Returns jitted ``step(storage, opt, batch) -> (storage, opt, metrics)``
+    for the pipelined training path (the paper's full method when
+    ``partitioned``): modular/naive pipeline over a mesh with a leading
+    `stage` axis, optionally composed with `data` and `model` axes.
+
+    Storage: outer leaves stage-replicated in their full compute layout;
+    layer leaves as ``[S, K, ...]`` stage stacks (replicated) or
+    ``[S, K, n_model, n_data, chunk]`` fp32 ZeRO chunks (partitioned).
+    ``batch`` leaves: [M, mb_local, ...] replicated over `stage`, sharded
+    over `data`.  The fused one-pass AdamW chunk kernel updates the
+    partitioned layer chunks; outer leaves keep the tree-map update.
+    """
+    from repro.core import pipeline as pp
+
+    axis = axis_ctx(mesh)
+    assert "stage" in mesh.axis_names, mesh.axis_names
+    if partitioned:
+        assert axis.data, "partitioned pipeline storage needs a `data` axis"
+    tmpl = full_template(cfg)
+    layer_template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tmpl["layers"])
+    if partitioned:
+        grad_fn = pp.make_partitioned_pipeline_grad_fn(
+            cfg, axis, spec, layer_template, remat=remat)
+    else:
+        grad_fn = pp.make_pipeline_grad_fn(cfg, axis, spec, remat=remat)
+    sspecs = pipeline_storage_specs(cfg, axis, partitioned)
+    sq_reduce = make_pipeline_sq_reduce(cfg, axis, partitioned)
+    ospecs = {"mu": sspecs, "nu": sspecs, "step": P()}
+    bspecs = batch_specs(cfg, axis, microbatched=True)
+    mspecs = {"loss": P(), "ntok": P(), "lr": P(), "grad_norm": P()}
+    # chunk leaves take the one-pass fused AdamW kernel; the small replicated
+    # outer leaves keep the tree-map update (same dispatch split as the
+    # non-pipeline partitioned step)
+    fused = (lambda path: zp.is_stacked_path(path)) \
+        if (cfg.kernels and partitioned) else False
+
+    def step(storage, opt, batch):
+        grads, metrics = grad_fn(storage, batch)
+        storage, opt, om = adam_step(opt_cfg, storage, opt, grads,
+                                     sq_reduce=sq_reduce, fused=fused)
+        return storage, opt, dict(metrics, **om)
+
+    fn = compat.shard_map(step, mesh=mesh,
+                       in_specs=(sspecs, ospecs, bspecs),
+                       out_specs=(sspecs, ospecs, mspecs))
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+def make_pipeline_sq_reduce(cfg: ModelConfig, axis: AxisCtx,
+                            partitioned: bool, *, stage_axis: str = "stage"):
+    """Global grad sum-of-squares over the pipeline storage layout.
+
+    Outer leaves are stage-replicated (and, after the grad_fn's psum,
+    data-replicated); layer leaves are stage-sharded, so their contribution
+    is psummed over `stage` — and over `data` too when partitioned (disjoint
+    ZeRO chunks).  Model-sharded leaves psum over `model`; model-replicated
+    leaves (incl. their chunk stacks) must not.
+    """
+    fspecs = T.param_specs(cfg, axis.tp)
+    outer_specs = {k: v for k, v in fspecs.items() if k != "layers"}
+    lspecs = T.layer_specs(cfg, axis.tp)
+
+    def sq_reduce(grads):
+        def split(tree, specs):
+            shard = jnp.zeros((), jnp.float32)
+            repl = jnp.zeros((), jnp.float32)
+            flat_g = jax.tree.leaves(tree)
+            flat_s = jax.tree.leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+            for g, sp in zip(flat_g, flat_s):
+                s = jnp.sum(jnp.square(g.astype(jnp.float32)))
+                if zp.model_replicated(sp) or not axis.model:
+                    repl += s
+                else:
+                    shard += s
+            return shard, repl
+
+        o_shard, o_repl = split(
+            {k: v for k, v in grads.items() if k != "layers"}, outer_specs)
+        l_shard, l_repl = split(grads["layers"], lspecs)
+        outer_tot = (lax.psum(o_shard, axis.model) if axis.model
+                     else o_shard) + o_repl
+        l_tot = (lax.psum(l_shard, axis.model) if axis.model
+                 else l_shard) + l_repl
+        if partitioned and axis.data:
+            l_tot = lax.psum(l_tot, axis.data)
+        l_tot = lax.psum(l_tot, stage_axis)
+        return outer_tot + l_tot
+
+    return sq_reduce
+
+
+def pipeline_storage_specs(cfg: ModelConfig, axis: AxisCtx,
+                           partitioned: bool) -> PyTree:
+    from repro.core import pipeline as pp
+    return (pp.partitioned_stage_param_specs(cfg, axis.tp) if partitioned
+            else pp.stage_param_specs(cfg, axis.tp))
+
+
+def init_pipeline_storage(cfg: ModelConfig, mesh: Mesh, key, spec, *,
+                          partitioned: bool) -> PyTree:
+    """Materialise pipeline training-state storage on the stage mesh."""
+    from repro.core import pipeline as pp
+
+    axis = axis_ctx(mesh)
+    sspecs = pipeline_storage_specs(cfg, axis, partitioned)
+    lspecs = T.layer_specs(cfg, axis.tp)
+
+    def build(key):
+        params = T.init_params(cfg, key)
+        outer = {k: v for k, v in params.items() if k != "layers"}
+        if partitioned:
+            # fp32 master everywhere: chunks by construction, outer by cast
+            outer = jax.tree.map(lambda x: x.astype(jnp.float32), outer)
+            layers = pp.to_partitioned_stage_stack(
+                params["layers"], spec, axis.ndata, lspecs=lspecs, tp=axis.tp)
+        else:
+            layers = pp.to_stage_stack(params["layers"], spec)
+        return dict(outer, layers=layers)
+
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(build, out_shardings=shardings)(key)
+
+
 def build_fused_train_step(cfg: ModelConfig, mesh: Mesh, acc: AccumConfig,
                            opt_cfg: AdamConfig, *, donate: bool = True):
     """Layered training with the paper's §C.3 fused per-layer optimizer

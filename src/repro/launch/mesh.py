@@ -18,3 +18,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(shape, axes):
     return compat.make_mesh(shape, axes)
+
+
+def make_train_mesh(*, stages: int = 1, data: int = 1, model: int = 1):
+    """Training mesh for the launchers.  ``stages > 1`` prepends the pipeline
+    `stage` axis (stage x data x model — the paper's 3d mesh); otherwise the
+    classic data x model mesh."""
+    if stages > 1:
+        return compat.make_mesh((stages, data, model),
+                                ("stage", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))

@@ -78,6 +78,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--microbatches", default="1,2,4",
                     help="comma-separated n_mu candidates for --smoke")
+    ap.add_argument("--stages", default="1",
+                    help="comma-separated pipeline-stage candidates for "
+                         "--smoke (S > 1 plans a stage x data x model mesh "
+                         "running the modular pipeline)")
     ap.add_argument("--out", default=None, help="write the plan JSON here")
     args = ap.parse_args(argv)
 
@@ -100,10 +104,11 @@ def main(argv=None) -> dict:
             import jax
             devices = jax.local_device_count()
         mus = tuple(int(v) for v in args.microbatches.split(","))
+        stages = tuple(int(v) for v in args.stages.split(","))
         doc = planlib.smoke_plan_document(
             args.arch, devices=devices, global_batch=args.global_batch,
             seq_len=args.seq_len, steps=args.steps, microbatch_options=mus,
-            smoke=args.smoke)
+            stage_options=stages, smoke=args.smoke)
         print(json.dumps(doc["execution"], indent=1))
         print(f"({len(doc['plans'])} ranked executions; winner above)")
 

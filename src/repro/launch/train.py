@@ -31,8 +31,9 @@ from repro import configs
 from repro.checkpointing import store
 from repro.core import stepfn
 from repro.core.accumulation import AccumConfig
+from repro.core.schedules import PipeSpec
 from repro.data.synthetic import DataConfig, batch_for
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_train_mesh
 from repro.optim.adam import AdamConfig, adam_init
 
 
@@ -59,6 +60,8 @@ def apply_plan(args, argv) -> None:
     take("--global-batch", "global_batch", "global_batch")
     take("--seq-len", "seq_len", "seq_len")
     take("--steps", "steps", "steps")
+    take("--stages", "stages", "stages")
+    take("--schedule", "schedule", "schedule")
     if "partitioned" in ex and "--no-partition" not in passed:
         args.no_partition = not ex["partitioned"]
 
@@ -84,6 +87,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="1x1",
                     help="data x model, e.g. 2x2 (needs that many devices)")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages; > 1 trains on a stage x data x "
+                         "model mesh through the modular/naive pipeline")
+    ap.add_argument("--schedule", default="modular",
+                    choices=["modular", "naive"],
+                    help="pipeline tick schedule (used when --stages > 1)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
@@ -96,17 +105,40 @@ def main(argv=None) -> dict:
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     d, m = (int(v) for v in args.mesh.split("x"))
-    mesh = make_test_mesh((d, m), ("data", "model"))
+    mesh = make_train_mesh(stages=args.stages, data=d, model=m)
     if m > 1:
         cfg = cfg.padded_for_tp(m)
     partitioned = not args.no_partition
-    acc = AccumConfig(method=args.method, partitioned=partitioned,
-                      n_microbatches=args.microbatches)
     opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                          decay_steps=args.steps)
-    step = stepfn.build_train_step(cfg, mesh, acc, opt_cfg, donate=False)
-    storage = stepfn.init_storage(cfg, mesh, jax.random.PRNGKey(args.seed),
-                                  partitioned=partitioned)
+    if args.stages > 1:
+        # pipelined path: modular pipeline IS layered accumulation per stage,
+        # so --method does not apply here
+        if cfg.num_layers % args.stages:
+            ap.error(f"--stages {args.stages} does not divide "
+                     f"num_layers={cfg.num_layers}")
+        if args.schedule == "modular" and args.microbatches < args.stages:
+            ap.error(f"the modular schedule needs --microbatches >= --stages "
+                     f"(got {args.microbatches} < {args.stages})")
+        spec = PipeSpec(n_stages=args.stages,
+                        layers_per_stage=cfg.num_layers // args.stages,
+                        n_microbatches=args.microbatches,
+                        schedule=args.schedule)
+        if partitioned and spec.schedule != "modular":
+            ap.error("--schedule naive cannot be combined with the "
+                     "partitioned state (use --no-partition)")
+        step = stepfn.build_pipeline_train_step(cfg, mesh, spec, opt_cfg,
+                                                partitioned=partitioned,
+                                                donate=False)
+        storage = stepfn.init_pipeline_storage(
+            cfg, mesh, jax.random.PRNGKey(args.seed), spec,
+            partitioned=partitioned)
+    else:
+        acc = AccumConfig(method=args.method, partitioned=partitioned,
+                          n_microbatches=args.microbatches)
+        step = stepfn.build_train_step(cfg, mesh, acc, opt_cfg, donate=False)
+        storage = stepfn.init_storage(cfg, mesh, jax.random.PRNGKey(args.seed),
+                                      partitioned=partitioned)
     opt = adam_init(storage, moment_dtype=opt_cfg.moment_dtype)
 
     start = 0

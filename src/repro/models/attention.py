@@ -111,15 +111,20 @@ def _attend_dense(q, k, v, positions, window, cap):
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
-def _attend_chunked(q, k, v, positions, window, cap, *, block_q: int):
+def _attend_chunked(q, k, v, positions, window, cap, *, block_q: int,
+                    kv_positions=None):
     """Query-chunked attention: peak logits memory O(block_q * S) instead of
-    O(S^2) — the pure-JAX long-sequence path (32k prefill).  Exact."""
+    O(S^2) — the pure-JAX long-sequence path (32k prefill).  Exact.
+    ``kv_positions`` defaults to ``positions``; pass it separately when the
+    queries/positions are padded to a block_q multiple but keys are not."""
     B, S, H, hd = q.shape
     nq = S // block_q
     qc = jnp.moveaxis(q.reshape(B, nq, block_q, H, hd), 1, 0)
     pc = jnp.moveaxis(positions.reshape(B, nq, block_q), 1, 0)
     w = jnp.asarray(window)
-    kj = positions[:, None, None, :]                      # [B,1,1,S]
+    if kv_positions is None:
+        kv_positions = positions
+    kj = kv_positions[:, None, None, :]                   # [B,1,1,S_kv]
 
     def chunk(_, inp):
         qi_, pi_ = inp                                    # [B,block_q,H,hd]
@@ -191,9 +196,23 @@ def attention_train(cfg: ModelConfig, p: PyTree, x: jnp.ndarray, *,
                      (q, k, v))
     else:
         ke, ve = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
-        if S > CHUNKED_THRESHOLD and S % 512 == 0:
-            y = _attend_chunked(q, ke, ve, positions, window,
-                                cfg.attn_logit_softcap, block_q=512)
+        if S > CHUNKED_THRESHOLD:
+            # always chunk past the threshold: the old `S % 512 == 0` guard
+            # silently fell back to the dense path for ragged long sequences,
+            # materializing exactly the O(S^2) logits the threshold exists to
+            # avoid.  Pad queries/positions up to a block_q multiple instead
+            # (keys stay un-padded; the pad rows are discarded after).
+            block_q = 512
+            pad = (-S) % block_q
+            if pad:
+                q_p = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                pos_p = jnp.pad(positions, ((0, 0), (0, pad)), mode="edge")
+            else:
+                q_p, pos_p = q, positions
+            y = _attend_chunked(q_p, ke, ve, pos_p, window,
+                                cfg.attn_logit_softcap, block_q=block_q,
+                                kv_positions=positions)
+            y = y[:, :S] if pad else y
         else:
             y = _attend_dense(q, ke, ve, positions, window,
                               cfg.attn_logit_softcap)

@@ -52,23 +52,27 @@ def adam_init(storage: PyTree, *, moment_dtype="float32") -> PyTree:
 
 def adam_step(c: AdamConfig, storage: PyTree, opt: PyTree, grads: PyTree, *,
               sq_reduce: Callable[[PyTree], jnp.ndarray] | None = None,
-              fused: bool = False) -> tuple[PyTree, PyTree, dict]:
+              fused: bool | Callable = False) -> tuple[PyTree, PyTree, dict]:
     """One AdamW update.  All trees share the storage layout (fp32).
 
     ``fused=True`` dispatches each leaf to the one-pass Pallas chunk-update
     kernel (kernels/adamw.py) — intended for the ZeRO-partitioned flat-chunk
-    layout, where it turns the ~6 HBM round-trips of the tree-map update
-    into one read + one write per state tensor.  The grad-clip scale is
-    folded into the kernel instead of materialising a scaled gradient tree.
-    Runs the exact float ops of the unfused path (equal to within FMA
+    layout (incl. the pipeline's ``[S, K, n_model, n_data, chunk]`` stage
+    stacks), where it turns the ~6 HBM round-trips of the tree-map update
+    into one read + one write per state tensor.  ``fused`` may also be a
+    ``path -> bool`` predicate for mixed storage (e.g. chunked layer stacks
+    alongside full replicated outer leaves).  The grad-clip scale is folded
+    into the kernel instead of materialising a scaled gradient tree.  Runs
+    the exact float ops of the unfused path (equal to within FMA
     contraction).
     """
     step = opt["step"] + 1
     lr = schedule(c, step)
+    any_fused = bool(fused) if isinstance(fused, bool) else True
     if c.grad_clip > 0 and sq_reduce is not None:
         gnorm = jnp.sqrt(sq_reduce(grads) + 1e-16)
         gscale = jnp.minimum(1.0, c.grad_clip / gnorm)
-        if not fused:
+        if not any_fused:
             grads = jax.tree.map(lambda g: g * gscale, grads)
     else:
         gnorm = jnp.zeros(())
@@ -77,28 +81,40 @@ def adam_step(c: AdamConfig, storage: PyTree, opt: PyTree, grads: PyTree, *,
     b2c = 1 - c.b2 ** step.astype(jnp.float32)
 
     mdt = jnp.dtype(c.moment_dtype)
+    pre_scaled = any_fused and c.grad_clip > 0 and sq_reduce is not None
 
-    if fused:
+    def upd_unfused(p, m, v, g):
+        if pre_scaled:
+            # clip not folded into a tree-wide grad scale above (the fused
+            # leaves take it via the kernel operand); apply it per leaf here
+            g = g * gscale
+        m32 = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
+        v32 = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * jnp.square(g)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        p = p - lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p)
+        return p, m32.astype(mdt), v32.astype(mdt)
+
+    if any_fused:
         from repro.kernels import ops as kops
         scalars = jnp.stack([lr, b1c, b2c, gscale])
 
-        def upd(p, m, v, g):
+        def upd_fused(p, m, v, g):
             return kops.fused_adamw(p, m, v, g, scalars, b1=c.b1, b2=c.b2,
                                     eps=c.eps, wd=c.weight_decay)
-    else:
-        def upd(p, m, v, g):
-            m32 = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
-            v32 = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * jnp.square(g)
-            mh = m32 / b1c
-            vh = v32 / b2c
-            p = p - lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p)
-            return p, m32.astype(mdt), v32.astype(mdt)
 
-    flat_p, treedef = jax.tree.flatten(storage)
+    def upd_for(path):
+        use = fused if isinstance(fused, bool) else fused(path)
+        return upd_fused if use else upd_unfused
+
+    flat_pp, treedef = jax.tree_util.tree_flatten_with_path(storage)
+    paths = [p for p, _ in flat_pp]
+    flat_p = [l for _, l in flat_pp]
     flat_m = treedef.flatten_up_to(opt["mu"])
     flat_v = treedef.flatten_up_to(opt["nu"])
     flat_g = treedef.flatten_up_to(grads)
-    out = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    out = [upd_for(path)(p, m, v, g)
+           for path, p, m, v, g in zip(paths, flat_p, flat_m, flat_v, flat_g)]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

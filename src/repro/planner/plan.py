@@ -83,11 +83,19 @@ def _factorizations(n: int) -> list[tuple[int, int]]:
 def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
                         seq_len: int = 64, steps: int = 5,
                         microbatch_options: tuple[int, ...] = (1, 2, 4),
+                        stage_options: tuple[int, ...] = (1,),
                         smoke: bool = True) -> dict:
-    """Rank executable (mesh, method, partition, n_mu) combos for ``arch``
-    on ``devices`` local devices, using roofline-traced per-layer costs.
-    ``smoke`` selects the reduced config (and is recorded in the plan, so
-    ``launch.train --plan`` runs the same config that was costed).
+    """Rank executable (stage-mesh, method, partition, n_mu) combos for
+    ``arch`` on ``devices`` local devices, using roofline-traced per-layer
+    costs.  ``smoke`` selects the reduced config (and is recorded in the
+    plan, so ``launch.train --plan`` runs the same config that was costed).
+
+    ``stage_options`` adds pipelined candidates: each stage count S > 1
+    splits the devices into a stage x data x model mesh and runs the modular
+    pipeline (= layered accumulation per stage), priced with its bubble
+    fraction and per-tick p2p traffic.  The winner's ``execution`` section
+    carries the ``stages``/``schedule`` fields ``launch.train --plan``
+    needs to build the pipelined step.
 
     Scoring mirrors the paper's accounting at smoke scale: per-device compute
     (fwd + recompute + transposed dots), data-axis ZeRO/reduction bytes
@@ -102,54 +110,77 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
 
     cfg0 = configs.get_config(arch, smoke=smoke)
     rows = []
-    for d, mdl in _factorizations(devices):
-        cfg = cfg0.padded_for_tp(mdl) if mdl > 1 else cfg0
-        L = cfg.num_layers
-        for M in microbatch_options:
-            if global_batch % (M * d) or global_batch < M * d:
+    for S in sorted(set(stage_options)):
+        if devices % S:
+            continue
+        for d, mdl in _factorizations(devices // S):
+            cfg = cfg0.padded_for_tp(mdl) if mdl > 1 else cfg0
+            L = cfg.num_layers
+            if S > 1 and L % S:
                 continue
-            mb_local = global_batch // (M * d)
-            tc = V.traced_layer_costs(cfg, mb_local, seq_len)
-            f_dev = tc.flops_fwd_layer / mdl
-            head_dev = tc.flops_head / mdl
-            compute_s = (4.0 * L * M * f_dev + 3.0 * M * head_dev) \
-                / roofline.PEAK_FLOPS
-            ring_d = (d - 1) / d if d > 1 else 0.0
-            ring_m = (mdl - 1) / mdl if mdl > 1 else 0.0
-            # un-overlapped Megatron psums: ~4 per layer per micro-batch
-            # (attn out + mlp out, fwd + bwd), payload = one activation
-            tp_s = (4.0 * L * M * 2.0 * ring_m * tc.act_bytes
-                    / roofline.ICI_BW)
-            for method in ("layered", "standard"):
-                for part in ((False, True) if d > 1 else (False,)):
-                    if part:
-                        per_layer = 3.0 * ring_d * tc.layer_bytes
-                        n_coll = L * (M if method == "standard" else 1)
-                        data_bytes = (n_coll * per_layer
-                                      + 3.0 * ring_d * tc.outer_bytes
-                                      * (M if method == "standard" else 1))
-                    else:
-                        data_bytes = 2.0 * ring_d * (L * tc.layer_bytes
-                                                     + tc.outer_bytes)
-                    data_s = data_bytes / roofline.ICI_BW
-                    if method == "layered":
-                        step_s = max(compute_s, data_s) + tp_s
-                    else:
-                        step_s = compute_s + data_s + tp_s
-                    rows.append({
-                        "mesh": f"{d}x{mdl}",
-                        "method": method,
-                        "partitioned": part,
-                        "microbatches": M,
-                        "score_step_s": step_s,
-                        "compute_s": compute_s,
-                        "data_coll_s": data_s,
-                        "tp_coll_s": tp_s,
-                    })
+            K = L // S
+            for M in microbatch_options:
+                if global_batch % (M * d) or global_batch < M * d:
+                    continue
+                if S > 1 and M < S:
+                    continue            # modular schedule needs n_mu >= S
+                mb_local = global_batch // (M * d)
+                tc = V.traced_layer_costs(cfg, mb_local, seq_len)
+                f_dev = tc.flops_fwd_layer / mdl
+                head_dev = tc.flops_head / mdl
+                # per-device layer compute: a pipeline stage runs K of the L
+                # layers, stretched by the bubble fraction of its schedule
+                compute_s = (4.0 * K * M * f_dev + 3.0 * M * head_dev) \
+                    / roofline.PEAK_FLOPS
+                p2p_s = 0.0
+                if S > 1:
+                    bubble = (K * M) / (K * M + S - 1)
+                    compute_s = compute_s / bubble
+                    # modular: one boundary activation per layer-tick, both
+                    # directions (fwd + bwd ring)
+                    p2p_s = (2.0 * (K * M + S - 1) * tc.act_bytes
+                             / roofline.ICI_BW)
+                ring_d = (d - 1) / d if d > 1 else 0.0
+                ring_m = (mdl - 1) / mdl if mdl > 1 else 0.0
+                # un-overlapped Megatron psums: ~4 per layer per micro-batch
+                # (attn out + mlp out, fwd + bwd), payload = one activation
+                tp_s = (4.0 * K * M * 2.0 * ring_m * tc.act_bytes
+                        / roofline.ICI_BW)
+                for method in (("layered",) if S > 1
+                               else ("layered", "standard")):
+                    for part in ((False, True) if d > 1 else (False,)):
+                        if part:
+                            per_layer = 3.0 * ring_d * tc.layer_bytes
+                            n_coll = K * (M if method == "standard" else 1)
+                            data_bytes = (n_coll * per_layer
+                                          + 3.0 * ring_d * tc.outer_bytes
+                                          * (M if method == "standard" else 1))
+                        else:
+                            data_bytes = 2.0 * ring_d * (
+                                K * tc.layer_bytes + tc.outer_bytes)
+                        data_s = data_bytes / roofline.ICI_BW
+                        if method == "layered":
+                            step_s = max(compute_s, data_s) + tp_s + p2p_s
+                        else:
+                            step_s = compute_s + data_s + tp_s + p2p_s
+                        rows.append({
+                            "mesh": f"{d}x{mdl}",
+                            "stages": S,
+                            "schedule": "modular" if S > 1 else None,
+                            "method": method,
+                            "partitioned": part,
+                            "microbatches": M,
+                            "score_step_s": step_s,
+                            "compute_s": compute_s,
+                            "data_coll_s": data_s,
+                            "tp_coll_s": tp_s,
+                            "p2p_s": p2p_s,
+                        })
     if not rows:
         raise ValueError(
             f"no feasible execution for arch={arch} devices={devices} "
-            f"global_batch={global_batch} microbatches={microbatch_options}")
+            f"global_batch={global_batch} microbatches={microbatch_options} "
+            f"stages={stage_options}")
     rows.sort(key=lambda r: (r["score_step_s"], not r["partitioned"]))
     win = rows[0]
     execution = {
@@ -163,6 +194,9 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
         "seq_len": seq_len,
         "steps": steps,
     }
+    if win["stages"] > 1:
+        execution["stages"] = win["stages"]
+        execution["schedule"] = win["schedule"]
     return {
         "version": PLAN_VERSION,
         "kind": "execution",

@@ -71,6 +71,14 @@ class Plan:
         return (self.best_time_s, self.offload, not self.partitioned,
                 -self.n_gpu)
 
+    @property
+    def stage_mesh(self) -> dict:
+        """The mesh-axis sizes an executor needs to build this plan's
+        stage x data x model device mesh (the fields launch.train consumes
+        for pipelined plans): n_l pipeline stages, n_b data shards, n_a
+        tensor-parallel ways."""
+        return {"stage": self.n_l, "data": self.n_b, "model": self.n_a}
+
     def row(self) -> dict:
         out = {
             "family": self.family, "schedule": self.schedule,
@@ -79,6 +87,7 @@ class Plan:
             "n_a": self.n_a, "n_l": self.n_l, "n_b": self.n_b,
             "n_mu": self.n_mu, "b_mu": self.b_mu, "n_chunks": self.n_chunks,
             "n_gpu": self.n_gpu, "b": self.b,
+            "stage_mesh": self.stage_mesh,
             "efficiency": {k: round(v, 4) for k, v in self.efficiency.items()},
             "time_days": round(self.time_s / calc.DAY, 3),
         }

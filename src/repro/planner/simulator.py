@@ -599,7 +599,8 @@ def simulate(sim: SimConfig, cost: CostModel, *,
 def predict_spmd_composition(spec, cost: CostModel, *,
                              fwd_extra_flops: float = 0.0,
                              bwd_extra_flops: float = 0.0,
-                             bwd_p2p_mult: float = 1.0) -> dict:
+                             bwd_p2p_mult: float = 1.0,
+                             extra_coll_bytes: float = 0.0) -> dict:
     """Predicted per-device cost composition of the repo's SPMD pipeline
     lowering (core/pipeline.py) for a ``schedules.PipeSpec``.
 
@@ -611,16 +612,19 @@ def predict_spmd_composition(spec, cost: CostModel, *,
     dead code* in the transpose (no cotangent consumes its primal output, so
     it is DCE'd), leaving exactly one transposed permute per tick:
     ``bwd_p2p_mult = 1``.  ``*_extra_flops`` carry the stage-replicated
-    embed/head work (per device, whole step).  Compare against
+    embed/head work (per device, whole step); ``extra_coll_bytes`` the
+    non-permute wire bytes of the lowering (the end-of-step stage psum
+    completing the stage-replicated outer-leaf gradients).  Compare against
     ``roofline.analyze`` on the lowered grad fn.
     """
     layer_ticks = spec.layer_ticks_per_stage          # includes bubble ticks
     flops = (layer_ticks * (cost.flops_fwd_layer + cost.flops_bwd_layer)
              + fwd_extra_flops + bwd_extra_flops)
     p2p = spec.spmd_p2p_bytes(cost.act_bytes) * (1.0 + bwd_p2p_mult)
+    coll = p2p + extra_coll_bytes
     return {
         "dot_flops": flops,
         "p2p_bytes": p2p,
         "compute_s": flops / cost.flops_rate,
-        "collective_s": p2p / cost.p2p_bw if cost.p2p_bw > 0 else 0.0,
+        "collective_s": coll / cost.p2p_bw if cost.p2p_bw > 0 else 0.0,
     }

@@ -132,11 +132,15 @@ def pipeline_composition(cfg: ModelConfig, spec: PipeSpec, mesh,
         flops_rate=roofline.PEAK_FLOPS,
         p2p_bw=roofline.ICI_BW, coll_bw=roofline.ICI_BW)
     # embed/head run stage-replicated: head fwd once per micro-batch, its
-    # gradient (2x) via AD — all per device
+    # gradient (2x) via AD — all per device.  Their fp32 gradients get one
+    # completing ring-psum over `stage` at the end of the step.
+    S = spec.n_stages
+    outer_psum = 2.0 * (S - 1) / S * tc.outer_bytes
     pred = simlib.predict_spmd_composition(
         spec, cost,
         fwd_extra_flops=M * tc.flops_head,
-        bwd_extra_flops=2.0 * M * tc.flops_head)
+        bwd_extra_flops=2.0 * M * tc.flops_head,
+        extra_coll_bytes=outer_psum)
     measured = {"compute_s": meas.compute_s(),
                 "collective_s": meas.collective_s(),
                 "dot_flops": meas.dot_flops,

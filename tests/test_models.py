@@ -114,3 +114,76 @@ def test_chunked_attention_matches_dense():
         b = _attend_chunked(q, k, v, pos, w, 0.0, block_q=128)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Long-sequence fallback: no O(S^2) intermediate regardless of S % block_q
+# ---------------------------------------------------------------------------
+def _walk_avals(jaxpr, visit):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            visit(v.aval)
+        for val in eqn.params.values():
+            for u in (val if isinstance(val, (tuple, list)) else (val,)):
+                if hasattr(u, "jaxpr") and hasattr(u.jaxpr, "eqns"):
+                    _walk_avals(u.jaxpr, visit)
+                elif hasattr(u, "eqns"):
+                    _walk_avals(u, visit)
+
+
+def _max_quadratic_dims(fn, *args, S):
+    jpr = jax.make_jaxpr(fn)(*args)
+    worst = [0]
+
+    def visit(aval):
+        if hasattr(aval, "shape"):
+            worst[0] = max(worst[0], sum(1 for d in aval.shape if d >= S))
+
+    _walk_avals(jpr.jaxpr, visit)
+    return worst[0]
+
+
+@pytest.mark.parametrize("S", [8200, 8192 + 512])
+def test_long_sequence_attention_never_materializes_s2(S):
+    """Regression (ISSUE 5): for S > CHUNKED_THRESHOLD with S % 512 != 0 the
+    non-Pallas path used to silently fall back to _attend_dense and
+    materialize the [S, S] logits.  The chunked path must now always take
+    over (queries padded to a block_q multiple), so no intermediate in the
+    traced program may carry two >= S dims."""
+    from repro.models import attention as A
+
+    assert S > A.CHUNKED_THRESHOLD
+    cfg = make_cfg("dense")
+    p = A.init_attention(cfg, KEY)
+    B, D = 1, cfg.d_model
+    x = jax.ShapeDtypeStruct((B, S, D), jnp.float32)
+    pos = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def fwd(x, pos):
+        return A.attention_train(cfg, p, x, positions=pos, window=0,
+                                 axis=AXIS, use_pallas=False)
+
+    assert _max_quadratic_dims(fwd, x, pos, S=S) <= 1
+
+
+def test_long_sequence_padded_chunked_matches_dense_values():
+    """The padded chunked path must stay exact for ragged S (checked at a
+    small scale by lowering CHUNKED_THRESHOLD so both paths are cheap)."""
+    from repro.models import attention as A
+
+    cfg = make_cfg("dense")
+    p = A.init_attention(cfg, KEY)
+    B, S, D = 1, 300, cfg.d_model        # S % 512 != 0
+    x = jax.random.normal(KEY, (B, S, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    dense = A.attention_train(cfg, p, x, positions=pos, window=0, axis=AXIS,
+                              use_pallas=False)
+    orig = A.CHUNKED_THRESHOLD
+    A.CHUNKED_THRESHOLD = 256            # force the padded chunked path
+    try:
+        chunked = A.attention_train(cfg, p, x, positions=pos, window=0,
+                                    axis=AXIS, use_pallas=False)
+    finally:
+        A.CHUNKED_THRESHOLD = orig
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)

@@ -59,3 +59,21 @@ def test_partitioned_shapes_cover_params():
             numel *= 2 / leaf.shape[-3] if False else 1
         n_dst += numel
     assert n_dst >= n_src / 2   # chunks cover the content (with padding)
+
+
+def test_local_shape_tp_mismatch_raises_legible_valueerror():
+    """A tp that does not divide a model-sharded dim must fail with a
+    ValueError naming the leaf path, global shape and tp — not an anonymous
+    AssertionError from deep inside spec construction (ISSUE 5)."""
+    import pytest
+
+    with pytest.raises(ValueError, match=r"tp=3.*\(30, 7\)"):
+        zp.local_shape((30, 7), P(None, "model"), 3)
+    # tree-level entry point carries the leaf path into the message
+    tmpl = {"layers": {"attn": {"wq": jax.ShapeDtypeStruct((8, 30), jnp.float32)}}}
+    specs = {"layers": {"attn": {"wq": P(None, None, "model")}}}
+    stacked = {"layers": {"attn": {"wq": jax.ShapeDtypeStruct((2, 8, 30),
+                                                              jnp.float32)}}}
+    with pytest.raises(ValueError, match=r"wq"):
+        zp.partitioned_shapes(stacked, specs, n_data=2, tp=4)
+    assert zp.local_shape((30, 8), P(None, "model"), 4) == (30, 2)

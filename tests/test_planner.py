@@ -292,6 +292,29 @@ def test_plan_roundtrips_through_train(tmp_path):
     assert result["steps"] == 2
 
 
+def test_pipelined_plan_roundtrips_through_train(tmp_path):
+    """ISSUE 5: a planner-emitted PIPELINED plan (stage-mesh fields in the
+    execution section) must execute through launch.train --plan — the
+    stage x data x model mesh, the modular-pipeline step, finite loss."""
+    import math
+
+    from repro.launch import plan as plan_cli
+    from repro.launch import train as train_cli
+
+    out = tmp_path / "plan_pipe.json"
+    doc = plan_cli.main(["--arch", "gemma-2b", "--smoke", "--devices", "4",
+                         "--stages", "2", "--microbatches", "2,4",
+                         "--global-batch", "4", "--seq-len", "32",
+                         "--steps", "2", "--out", str(out)])
+    ex = doc["execution"]
+    assert ex["stages"] == 2 and ex["schedule"] == "modular"
+    assert all(r["stages"] == 2 for r in doc["plans"])
+    result = train_cli.main(["--plan", str(out), "--steps", "2"])
+    assert result["arch"] == "gemma-2b" and result["steps"] == 2
+    assert math.isfinite(result["first_loss"])
+    assert math.isfinite(result["last_loss"])
+
+
 # ---------------------------------------------------------------------------
 # Serving mode (SimConfig.serving): HBM-bound decode with the paged layout
 # ---------------------------------------------------------------------------
