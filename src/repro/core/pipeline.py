@@ -1,27 +1,46 @@
-"""Modular pipeline parallelism (paper §4) as an SPMD ppermute pipeline.
+"""Generic tick-table pipeline executor (schedule-as-data, paper §4).
 
-The `stage` mesh axis holds the pipeline.  Layer parameters live stage-local
-as a ``[K, ...]`` stack (naive: contiguous slices; modular: round-robin
-columns of the global ``[L, ...]`` stack).  Activations ride a ring of
-``lax.ppermute`` ops driven by the tick schedules in core/schedules.py; idle
-(bubble) ticks compute on garbage and are masked — so the bubble shows up
-verbatim as wasted FLOPs in the roofline's useful-compute ratio, exactly
-like idle devices waste time on real hardware.
+The `stage` mesh axis holds the pipeline.  A pipeline schedule is *data*: a
+static tick table emitted by ``planner.simulator.build_tick_table`` (single
+source of truth, derived from the same ``stage_order`` the discrete-event
+simulator runs), listing for every tick and stage one (kind, layer-chunk,
+micro-batch) unit plus the derived ring-recv meanings.  ONE generic
+``lax.scan`` body interprets any table — modular, naive/gpipe, 1f1b and
+interleaved-1f1b all execute through the same code path, with both
+replicated ``[S, K, ...]`` and ZeRO-partitioned chunk storage.
+
+Chunk placement is uniform (simulator.TickTable): stage s's local chunk v
+is global chunk ``g = v*S + s`` holding layers ``[g*k_c, (g+1)*k_c)`` — for
+V=1 the contiguous blocks of naive/1f1b, for V=K the paper's round-robin.
+Consecutive global chunks are always one forward ring hop apart, so one
+``ppermute`` ring serves every schedule.
+
+The backward is hand-written per tick (the accumulation.py pattern), not
+``jax.grad`` of the forward scan: 1f1b and interleaved run backward units
+*between* forward units of the same scan, an order AD's scan transpose
+cannot express.  Each tick every stage runs ONE masked chunk VJP — the
+``jax.vjp`` forward doubles as the F unit's compute and the pull as the B
+unit's (recompute + transposed dots, same 3x-forward bundle the remat'd AD
+path paid) — plus the loss stage's masked head VJP, and exactly three ring
+permutes: forward activation, head cotangent (loss ring), backward
+cotangent.  Bubble ticks compute on garbage and are masked, so the bubble
+shows up verbatim as wasted FLOPs in the roofline, like idle devices waste
+time on real hardware.  ``TickTable.predicted_collectives`` states the
+resulting op counts; the conformance tests pin the lowered jaxpr to them.
 
 Embedding / head run stage-replicated (their compute is marginal); only
-stage 0's embedding feeds the pipeline and only the stage that receives the
-final outputs (stage 0, via the ring wrap) evaluates the loss, so gradients
-stay correct with one psum over `stage` for the replicated leaves.
+stage 0's embedding feeds the pipeline, the final output wraps to stage 0
+whose head VJP emits the loss AND the cotangent that rides the loss ring
+back to stage S-1 in the same tick.  Gradients stay correct with one psum
+over `stage` for the stage-replicated outer leaves (PR-5 invariant).
 
-Backward is plain ``jax.grad`` through the tick scan: the transpose of the
-ppermute ring is the reverse ring, giving the symmetric backward pipeline
-for free, with per-tick remat.
-
-Composition with the paper's other ideas: the modular schedule already
-processes all micro-batches of a layer consecutively (= layered gradient
-accumulation per stage); data parallelism composes by running this function
-under an additional `data` axis — the per-stage gradient psum then happens
-once per stage-layer, spread across the backward pass (fig. 1 bottom).
+ZeRO-partitioned storage gathers each local chunk's weights ONCE per pass
+(V all-gathers per leaf = the layered-accumulation frequency; modular V=K
+keeps the K-gathers-per-leaf jaxpr pin) at the tick-table's gather
+boundaries, and reduce-scatters each chunk's gradient once at the end of
+the pass.  On pre-vma JAX the in-block model-replicated leaves get
+``compat.tp_entry_mark`` on the chunk weights inside the per-tick VJP, so
+the pull itself completes their partial gradients over `model`.
 """
 from __future__ import annotations
 
@@ -30,6 +49,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -46,24 +66,30 @@ PyTree = Any
 # Layer-stack <-> stage-stack layout
 # ---------------------------------------------------------------------------
 def to_stage_stack(layers: PyTree, spec: PipeSpec) -> PyTree:
-    """Global [L, ...] stacks -> [S, K, ...] (dim 0 shards over `stage`)."""
+    """Global [L, ...] stacks -> [S, K, ...] (dim 0 shards over `stage`).
+
+    Slot [s, v*k_c + j] holds global layer (v*S + s)*k_c + j — the uniform
+    chunk placement of the tick tables.  For naive/1f1b (V=1) this is the
+    contiguous reshape; for modular (V=K, k_c=1) the round-robin columns."""
     S, K = spec.n_stages, spec.layers_per_stage
+    V, k_c = spec.n_chunks, spec.layers_per_chunk
 
     def conv(x):
-        if spec.schedule == "naive":
-            return x.reshape(S, K, *x.shape[1:])
-        return x.reshape(K, S, *x.shape[1:]).swapaxes(0, 1)
+        rest = x.shape[1:]
+        return (x.reshape(V, S, k_c, *rest).swapaxes(0, 1)
+                .reshape(S, K, *rest))
 
     return jax.tree.map(conv, layers)
 
 
 def from_stage_stack(stages: PyTree, spec: PipeSpec) -> PyTree:
     S, K = spec.n_stages, spec.layers_per_stage
+    V, k_c = spec.n_chunks, spec.layers_per_chunk
 
     def conv(x):
-        if spec.schedule == "naive":
-            return x.reshape(S * K, *x.shape[2:])
-        return x.swapaxes(0, 1).reshape(S * K, *x.shape[2:])
+        rest = x.shape[2:]
+        return (x.reshape(S, V, k_c, *rest).swapaxes(0, 1)
+                .reshape(S * K, *rest))
 
     return jax.tree.map(conv, stages)
 
@@ -102,350 +128,21 @@ def partitioned_stage_param_specs(cfg: ModelConfig, tp: int) -> PyTree:
     return dict({k: v for k, v in base.items() if k != "layers"}, layers=layers)
 
 
-# ---------------------------------------------------------------------------
-# The pipelined loss
-# ---------------------------------------------------------------------------
-def make_pipeline_loss(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
-                       stage_axis: str = "stage", remat: bool = True):
-    """Returns loss_fn(params, batch) -> (mean_loss, (nll_sum, ntok)).
-
-    Call INSIDE shard_map over a mesh containing `stage` (+ optionally
-    `data`/`model`).  params["layers"] is the stage-local [K, ...] stack;
-    batch leaves are [M, mb_local, ...] (replicated over `stage`).
-    """
-    windows, flags, _ = T.layer_tables(cfg)
-    S, K, M = spec.n_stages, spec.layers_per_stage, spec.n_microbatches
-    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
-
-    def loss_fn(params, batch):
-        s = lax.axis_index(stage_axis)
-        shared = params.get("shared", {})
-
-        # ---- embed (stage-replicated compute; only stage 0's result enters)
-        def embed_one(_, mb):
-            return None, T.embed_inputs(cfg, params, mb, axis)
-
-        _, (X0, POS) = compat.scan(embed_one, None, batch)   # [M, mb, Sq, D]
-        on_stage0 = (s == 0)
-        vary_axes = (stage_axis, axis.data, axis.pod)
-        buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
-        buf_out = pvary_missing(jnp.zeros_like(X0), vary_axes)
-        pos = POS[0]                                       # identical per mb
-
-        def apply_one(lp, x, layer_id):
-            w = windows[layer_id]
-            fl = flags[layer_id]
-            x2, _aux = T.apply_layer(cfg, lp, shared, x, positions=pos,
-                                     window=w, shared_flag=fl, axis=axis)
-            return x2
-
-        # ---- tick body -----------------------------------------------------
-        if spec.schedule == "modular":
-            def tick(carry, t):
-                buf_in, buf_out = carry
-                busy, mb, r, layer_id = spec.modular_tick(t, s)
-                x = jax.tree.map(lambda b: b[mb], buf_in)
-                lp = jax.tree.map(lambda p: p[0, r], params["layers"])
-                y = apply_one(lp, x, layer_id)
-                y = jnp.where(busy, y, x)
-                recv = lax.ppermute(y, stage_axis, fwd_perm)
-                valid, mb_r, is_final = spec.modular_recv(t, s)
-                upd_in = jnp.where(valid & ~is_final, recv, buf_in[mb_r])
-                buf_in = buf_in.at[mb_r].set(upd_in)
-                upd_out = jnp.where(valid & is_final, recv, buf_out[mb_r])
-                buf_out = buf_out.at[mb_r].set(upd_out)
-                return (buf_in, buf_out), None
-        else:
-            def tick(carry, v):
-                buf_in, buf_out = carry
-                busy, mb = spec.naive_visit(v, s)
-                x = jax.tree.map(lambda b: b[mb], buf_in)
-
-                def layer_step(x, k):
-                    lp = jax.tree.map(lambda p: p[0, k], params["layers"])
-                    layer_id = s * K + k
-                    return apply_one(lp, x, layer_id), None
-
-                y, _ = compat.scan(layer_step, x, jnp.arange(K))
-                y = jnp.where(busy, y, x)
-                recv = lax.ppermute(y, stage_axis, fwd_perm)
-                valid, mb_r, is_final = spec.naive_recv(v, s)
-                upd_in = jnp.where(valid & ~is_final, recv, buf_in[mb_r])
-                buf_in = buf_in.at[mb_r].set(upd_in)
-                upd_out = jnp.where(valid & is_final, recv, buf_out[mb_r])
-                buf_out = buf_out.at[mb_r].set(upd_out)
-                return (buf_in, buf_out), None
-
-        if remat:
-            tick = compat.checkpoint(tick)
-        (buf_in, buf_out), _ = compat.scan(
-            tick, (buf_in, buf_out), jnp.arange(spec.total_outer_steps))
-
-        # ---- head: only the stage holding the outputs (stage 0) contributes
-        n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
-        if axis.data:
-            n_tok = lax.psum(n_tok, axis.data)
-        if axis.pod:
-            n_tok = lax.psum(n_tok, axis.pod)
-        inv_n = 1.0 / n_tok
-
-        def head_one(acc, xs):
-            mb, x = xs
-            h = apply_norm(cfg, params["final_norm"], x.astype(jnp.dtype(cfg.dtype)))
-            nll = T.head_loss(cfg, params, h, mb, axis)
-            return acc + nll, None
-
-        nll_sum, _ = compat.scan(head_one,
-                              pvary_missing(jnp.zeros((), jnp.float32),
-                                            vary_axes),
-                              (batch, buf_out))
-        nll_sum = jnp.where(on_stage0, nll_sum, 0.0)
-        # psum over `stage` both broadcasts the loss and kills the garbage
-        # head gradients of the non-owning stages.
-        nll_sum = lax.psum(nll_sum, stage_axis)
-        return nll_sum * inv_n, (nll_sum, n_tok)
-
-    return loss_fn
-
-
-# ---------------------------------------------------------------------------
-# ZeRO-partitioned modular pipeline (the paper's full "improved" method)
-# ---------------------------------------------------------------------------
-def make_partitioned_pipeline_loss(cfg: ModelConfig, axis: AxisCtx,
-                                   spec: PipeSpec, layer_template: PyTree, *,
-                                   stage_axis: str = "stage",
-                                   remat: bool = True):
-    """Modular pipeline with the stage-local layer stack ZeRO-partitioned
-    over `data` (paper §4: "it allows partitioning the training state in the
-    fastest 3d parallel settings").
-
-    Scheduling insight that keeps this SPMD-safe: in the modular schedule,
-    stage s uses its round-r weights for ticks [rM+s, rM+s+M); across stages
-    the windows overlap by at most one round.  So the tick scan is
-    restructured as an outer scan over rounds — every stage all_gathers its
-    round-r layer simultaneously (a uniform collective, once per layer per
-    pass = the layered-accumulation frequency) — with the previous round's
-    weights double-buffered in the carry (the paper's mixed buffering,
-    appendix C.2).  Backward-mode AD transposes the gathers into one
-    reduce-scatter per layer automatically.
-
-    Composition with tensor parallelism (the paper's "fastest 3d parallel
-    settings"): chunks store the *model-local* shard of each leaf, so the
-    per-round all_gather runs over `data` only and restores the model-local
-    bf16 tensor — exactly what the Megatron-sharded layer compute consumes.
-    On pre-vma JAX the in-block model-replicated leaves (MoE router, mamba
-    B/C, rwkv mixes) get an explicit ``compat.tp_entry_mark`` on the gathered
-    weight: its transpose is the model-axis psum that completes their partial
-    gradients, so AD still collapses the whole reduction into one per-layer
-    reduce-scatter (over `data`) plus the Megatron-f psum (over `model`).
-
-    params["layers"] leaves: [1, K, n_model, n_data, chunk] fp32 storage
-    chunks (stage-local; inside shard_map the n_model/n_data dims are 1);
-    ``layer_template`` holds the *global* per-layer shapes.  Requires
-    schedule == "modular".
-    """
-    from repro.core import partition as zp
-    from repro.core.accumulation import _needs_pre_vma_model_psum
-
-    assert spec.schedule == "modular"
-    windows, flags, _ = T.layer_tables(cfg)
-    S, K, M = spec.n_stages, spec.layers_per_stage, spec.n_microbatches
-    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
-    dtype = jnp.dtype(cfg.dtype)
-    lspecs = T.layer_specs(cfg, axis.tp)
-
-    def gather_round(chunks_r):
-        """[1, 1, chunk] leaves -> bf16 model-local layer params."""
-        def g(path, tmpl, sp, c):
-            full = zp.gather_local(
-                c, axis.data, zp.local_shape(tmpl.shape, sp, axis.tp,
-                                             path=path),
-                dtype, stacked=False)
-            full = pvary_missing(full, (axis.data, axis.pod))
-            if _needs_pre_vma_model_psum(path, axis):
-                full = compat.tp_entry_mark(full, axis.model)
-            return full
-        return jax.tree_util.tree_map_with_path(g, layer_template, lspecs,
-                                                chunks_r)
-
-    def zeros_round():
-        """Round-(-1) double-buffer seed, typed like a gather_round output."""
-        def z(path, tmpl, sp):
-            x = pvary_missing(
-                jnp.zeros(zp.local_shape(tmpl.shape, sp, axis.tp, path=path),
-                          dtype),
-                (stage_axis, axis.data, axis.pod))
-            if _needs_pre_vma_model_psum(path, axis):
-                x = compat.tp_entry_mark(x, axis.model)
-            return x
-        return jax.tree_util.tree_map_with_path(z, layer_template, lspecs)
-
-    def loss_fn(params, batch):
-        s = lax.axis_index(stage_axis)
-        # outer leaves are fp32 master storage; compute in cfg.dtype (same
-        # cast the non-pipeline partitioned path does in gather_outer)
-        params = dict({k: jax.tree.map(lambda x: x.astype(dtype), v)
-                       for k, v in params.items() if k != "layers"},
-                      layers=params["layers"])
-        shared = params.get("shared", {})
-
-        def embed_one(_, mb):
-            return None, T.embed_inputs(cfg, params, mb, axis)
-
-        _, (X0, POS) = compat.scan(embed_one, None, batch)
-        on_stage0 = (s == 0)
-        vary_axes = (stage_axis, axis.data, axis.pod)
-        buf_in = jnp.where(on_stage0, X0, jnp.zeros_like(X0))
-        buf_out = pvary_missing(jnp.zeros_like(X0), vary_axes)
-        pos = POS[0]
-
-        def apply_one(lp, x, layer_id):
-            x2, _aux = T.apply_layer(cfg, lp, shared, x, positions=pos,
-                                     window=windows[layer_id],
-                                     shared_flag=flags[layer_id], axis=axis)
-            return x2
-
-        def tick(carry, t):
-            buf_in, buf_out, w_prev, w_cur, r_cur = carry
-            busy, mb, r, layer_id = spec.modular_tick(t, s)
-            # this stage is either in round r_cur or still in r_cur - 1
-            lp = jax.tree.map(
-                lambda a, b: jnp.where(r == r_cur, a, b), w_cur, w_prev)
-            x = buf_in[mb]
-            y = apply_one(lp, x, layer_id)
-            y = jnp.where(busy, y, x)
-            recv = lax.ppermute(y, stage_axis, fwd_perm)
-            valid, mb_r, is_final = spec.modular_recv(t, s)
-            buf_in = buf_in.at[mb_r].set(
-                jnp.where(valid & ~is_final, recv, buf_in[mb_r]))
-            buf_out = buf_out.at[mb_r].set(
-                jnp.where(valid & is_final, recv, buf_out[mb_r]))
-            return (buf_in, buf_out, w_prev, w_cur, r_cur), None
-
-        if remat:
-            tick = compat.checkpoint(tick)
-
-        def round_step(carry, r):
-            buf_in, buf_out, w_cur = carry
-            # local chunk leaves are [1(stage), K, 1(model), 1(data), chunk]
-            w_next = gather_round(
-                jax.tree.map(lambda p: p[0, r], params["layers"]))
-            ticks = r * M + jnp.arange(M)
-            (buf_in, buf_out, _, _, _), _ = compat.scan(
-                tick, (buf_in, buf_out, w_cur, w_next, r), ticks)
-            return (buf_in, buf_out, w_next), None
-
-        # Main rounds 0..K-1 gather their layer once each (= K all_gathers
-        # per leaf per pass, the layered-accumulation frequency).  The S-1
-        # drain ticks only flush in-flight activations to the loss stage:
-        # every stage still busy there is in round K-1, so they reuse the
-        # last round's weights instead of re-issuing the round-(K-1) gather
-        # once per drain round (jaxpr-pinned in tests/test_pipeline.py).
-        (buf_in, buf_out, w_last), _ = compat.scan(
-            round_step, (buf_in, buf_out, zeros_round()), jnp.arange(K))
-        if S > 1:
-            drain = K * M + jnp.arange(S - 1)
-            (buf_in, buf_out, _, _, _), _ = compat.scan(
-                tick, (buf_in, buf_out, w_last, w_last, K - 1), drain)
-
-        n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
-        if axis.data:
-            n_tok = lax.psum(n_tok, axis.data)
-        if axis.pod:
-            n_tok = lax.psum(n_tok, axis.pod)
-
-        def head_one(acc, xs):
-            mb, x = xs
-            h = apply_norm(cfg, params["final_norm"],
-                           x.astype(jnp.dtype(cfg.dtype)))
-            return acc + T.head_loss(cfg, params, h, mb, axis), None
-
-        nll_sum, _ = compat.scan(
-            head_one, pvary_missing(jnp.zeros((), jnp.float32), vary_axes),
-            (batch, buf_out))
-        nll_sum = jnp.where(on_stage0, nll_sum, 0.0)
-        nll_sum = lax.psum(nll_sum, stage_axis)
-        return nll_sum / n_tok, (nll_sum, n_tok)
-
-    return loss_fn
-
-
-def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
-                                      spec: PipeSpec, layer_template: PyTree,
-                                      *, stage_axis: str = "stage",
-                                      remat: bool = True):
-    """grad_fn(params, batch) -> (grads, metrics) with ZeRO-chunked layers.
-
-    Layer gradients come out of AD already reduce-scattered (the transpose
-    of the per-round gather), with the pre-vma model-axis completion psums
-    for in-block replicated leaves inserted by the ``tp_entry_mark`` on the
-    gathered weights; only the small stage-replicated outer leaves need the
-    explicit data-axis psum (and reduction-time completion).
-    """
-    loss_fn = make_partitioned_pipeline_loss(cfg, axis, spec, layer_template,
-                                             stage_axis=stage_axis,
-                                             remat=remat)
-    from repro.core import partition as zp
-
-    def grad_fn(params, batch):
-        varied = dict(
-            {k: jax.tree.map(lambda x: zp.pvary_missing(
-                x, (axis.data, axis.pod)), v)
-             for k, v in params.items() if k != "layers"},
-            layers=params["layers"])   # chunks: AD reduces via the gather
-        (loss, (nll, ntok)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(varied, batch)
-        from repro.core.accumulation import _complete_block_replicated_grads
-        # layer-chunk grads arrive complete (tp_entry_mark transpose); only
-        # the outer leaves still follow the reduction-time completion pattern
-        grads = dict(_complete_block_replicated_grads(
-            {k: v for k, v in grads.items() if k != "layers"}, axis),
-            layers=grads["layers"])
-        if axis.data:
-            nll = lax.psum(nll, axis.data)
-        if axis.pod:
-            nll = lax.psum(nll, axis.pod)
-
-        def reduce(g):
-            # outer leaves are stage-replicated but their AD partials live on
-            # the stages that used them (loss stage for embed/head, every
-            # stage for `shared`): the stage psum completes them so all
-            # stages hold identical outer grads — required for consistent
-            # grad-norm clipping and replicated optimizer updates.
-            g = g.astype(jnp.float32)
-            g = lax.psum(g, stage_axis)
-            if axis.data:
-                g = lax.psum(g, axis.data)
-            if axis.pod:
-                g = lax.psum(g, axis.pod)
-            return g
-
-        grads = dict(
-            {k: jax.tree.map(reduce, v)
-             for k, v in grads.items() if k != "layers"},
-            layers=jax.tree.map(lambda g: g.astype(jnp.float32),
-                                grads["layers"]))
-        return grads, {"loss": nll / ntok, "ntok": ntok}
-
-    return grad_fn
-
-
 def to_partitioned_stage_stack(layers: PyTree, spec: PipeSpec, n_data: int,
                                *, lspecs: PyTree | None = None,
                                tp: int = 1) -> PyTree:
     """Global [L, ...] stacks -> [S, K, n_model, n_data, chunk] fp32 ZeRO
-    chunks (storage layout for make_partitioned_pipeline_*; shard with
+    chunks (storage layout for the partitioned executor; shard with
     partitioned_stage_param_specs).
 
     ``lspecs`` (T.layer_specs(cfg, tp), no stacking dim) + ``tp`` make the
     layout tensor-parallel aware: a model-sharded leaf is split along its
     'model' spec dim first, so slot [s, k, m, d, :] holds the d-th data
-    chunk of model shard m — the model-local flattening the per-round
+    chunk of model shard m — the model-local flattening the per-chunk
     data-only all_gather restores.  tp == 1 keeps every leaf in one
     (replicated) model slot.
     """
     import math as _math
-    from repro.core import partition as zp
 
     staged = to_stage_stack(layers, spec)   # [S, K, ...]
     if lspecs is None:
@@ -511,35 +208,343 @@ def from_partitioned_stage_stack(chunks: PyTree, spec: PipeSpec,
 
 
 # ---------------------------------------------------------------------------
-# Gradient step (replicated storage)
+# The generic tick-table executor
 # ---------------------------------------------------------------------------
-def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
-                          stage_axis: str = "stage", remat: bool = True):
-    """grad_fn(params, batch) -> (grads, metrics), inside shard_map."""
-    loss_fn = make_pipeline_loss(cfg, axis, spec, stage_axis=stage_axis,
-                                 remat=remat)
+def _table_rows(table) -> dict:
+    """The tick table as [T, S] device arrays the scan body indexes by
+    (tick, axis_index)."""
+    def arr(rows, dt=np.int32):
+        return jnp.asarray(np.asarray(rows, dtype=dt))
+    return {
+        "kind": arr(table.kind),
+        "v": arr(table.unit_v),
+        "mb": arr(table.unit_mb),
+        "fr_valid": arr(table.frecv_valid, np.bool_),
+        "fr_v": arr(table.frecv_v),
+        "fr_mb": arr(table.frecv_mb),
+        "fr_fin": arr(table.frecv_final, np.bool_),
+        "hr_valid": arr(table.hrecv_valid, np.bool_),
+        "hr_mb": arr(table.hrecv_mb),
+        "br_valid": arr(table.brecv_valid, np.bool_),
+        "br_v": arr(table.brecv_v),
+        "br_mb": arr(table.brecv_mb),
+    }
+
+
+def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
+                       layer_template: PyTree | None, *,
+                       partitioned: bool, stage_axis: str = "stage",
+                       table=None):
+    """grad_fn(params, batch) -> (grads, metrics) interpreting ``table``.
+
+    Call INSIDE shard_map over a mesh containing `stage` (+ optionally
+    `data`/`model`/`pod`).  Replicated storage: params["layers"] leaves are
+    the stage-local ``[1(stage), K, ...]`` stacks.  Partitioned storage:
+    ``[1, K, 1(model), 1(data), chunk]`` fp32 ZeRO chunks, with
+    ``layer_template`` holding the global per-layer shapes.  Batch leaves
+    are [M, mb_local, ...] (replicated over `stage`).
+    """
+    from repro.core import partition as zp
+    from repro.core.accumulation import (_complete_block_replicated_grads,
+                                         _needs_pre_vma_model_psum)
+    from repro.planner import simulator as simlib
+
+    if table is None:
+        table = spec.tick_table()
+    table.validate_executable()
+    S, M = spec.n_stages, spec.n_microbatches
+    V, k_c = table.n_chunks, table.layers_per_chunk
+    assert (table.n_stages, table.n_microbatches) == (S, M), \
+        (table.n_stages, table.n_microbatches, S, M)
+    assert V * k_c == spec.layers_per_stage
+    windows, flags, _ = T.layer_tables(cfg)
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    rev_perm = [(i, (i - 1) % S) for i in range(S)]
+    dtype = jnp.dtype(cfg.dtype)
+    tied = cfg.tie_embeddings
+    lspecs = T.layer_specs(cfg, axis.tp)
+    outer_specs = {k: v for k, v in T.param_specs(cfg, axis.tp).items()
+                   if k != "layers"}
+    ROWS = _table_rows(table)
+    segments = (table.gather_segments() if partitioned
+                else [(0, table.n_ticks, [])])
+    dp_axes = (axis.data, axis.pod)
+    vary_axes = (stage_axis, axis.data, axis.pod)
+
+    if partitioned:
+        assert layer_template is not None
+        layer_tmpl = layer_template
+    else:
+        layer_tmpl = None
+
+    def mark_chunk(w_c):
+        """Pre-vma: tp_entry_mark the in-block model-replicated chunk leaves
+        INSIDE the per-tick VJP, so the pull's transpose is the model psum
+        completing their partial gradients (PR-5 invariant)."""
+        if not partitioned:
+            return w_c
+
+        def m(path, w):
+            if _needs_pre_vma_model_psum(path, axis):
+                return compat.tp_entry_mark(w, axis.model)
+            return w
+        return jax.tree_util.tree_map_with_path(m, w_c)
+
+    def grad_zeros(tree, specs):
+        """f32 zero accumulators whose vma matches the executor's gradient
+        leaves: varying over stage/data/pod always (every stage accumulates
+        its own partials); over model iff the leaf is sharded."""
+        def z(leaf, sp):
+            axes = list(vary_axes)
+            if axis.model and not zp.model_replicated(sp):
+                axes.append(axis.model)
+            return zp.pvary_missing(jnp.zeros(leaf.shape, jnp.float32), axes)
+        return jax.tree.map(z, tree, specs)
 
     def grad_fn(params, batch):
-        # differentiate w.r.t. data/pod-VARYING copies so AD yields local
-        # partial grads (the pcast must sit OUTSIDE the differentiated
-        # function — its transpose is a psum); the single explicit reduction
-        # below is then the only data-axis collective.
-        params = jax.tree.map(
-            lambda x: pvary_missing(x, (axis.data, axis.pod)), params)
-        (loss, (nll, ntok)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        from repro.core.accumulation import _complete_block_replicated_grads
-        grads = _complete_block_replicated_grads(grads, axis)
+        s = lax.axis_index(stage_axis)
+        on_stage0 = (s == 0)
+        outer_store = {k: v for k, v in params.items() if k != "layers"}
+        # outer leaves run stage-replicated in compute dtype; mark them
+        # varying over stage/data/pod so the per-tick VJPs yield LOCAL
+        # partials — the single explicit psum below is the only reduction
+        outer_g = {k: jax.tree.map(
+            lambda x: pvary_missing(x.astype(dtype), vary_axes), v)
+            for k, v in outer_store.items()}
+        shared_g = outer_g.get("shared", {})
+
+        # ---- layer weights: one [K, ...] compute-dtype buffer ------------
+        if partitioned:
+            def wbuf_zeros():
+                def z(path, tmpl, sp):
+                    lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
+                    return pvary_missing(
+                        jnp.zeros((spec.layers_per_stage, *lshape), dtype),
+                        vary_axes)
+                return jax.tree_util.tree_map_with_path(z, layer_tmpl, lspecs)
+
+            def gather_chunk(v2):
+                """all_gather local chunk v2's weights over `data`: leaves
+                [k_c, 1, 1, chunk] -> [k_c, *model-local shape] bf16.  One
+                all_gather per leaf per chunk per pass — V per leaf total
+                (modular: V=K, the layered-accumulation frequency)."""
+                sl = jax.tree.map(
+                    lambda p: p[0, v2 * k_c:(v2 + 1) * k_c],
+                    params["layers"])
+
+                def g(path, tmpl, sp, c):
+                    lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
+                    full = zp.gather_local(c, axis.data, (k_c, *lshape),
+                                           dtype, stacked=True)
+                    return pvary_missing(full, dp_axes)
+                return jax.tree_util.tree_map_with_path(g, layer_tmpl,
+                                                        lspecs, sl)
+        else:
+            # stage-local [K, ...] stacks, data/pod-varying for local partials
+            wbuf0 = jax.tree.map(
+                lambda p: pvary_missing(p[0].astype(dtype), dp_axes),
+                params["layers"])
+
+        # ---- embed (stage-replicated compute; only stage 0's enters) -----
+        def embed_one(_, mb):
+            return None, T.embed_inputs(cfg, outer_g, mb, axis)
+
+        _, (X0, POS) = compat.scan(embed_one, None, batch)   # [M, mb, Sq, D]
+        pos = POS[0]                                         # identical per mb
+
+        n_tok = jnp.sum(batch["mask"].astype(jnp.float32))
         if axis.data:
-            nll = lax.psum(nll, axis.data)
+            n_tok = lax.psum(n_tok, axis.data)
         if axis.pod:
-            nll = lax.psum(nll, axis.pod)
+            n_tok = lax.psum(n_tok, axis.pod)
+        inv_n = 1.0 / n_tok
+
+        # ---- activation / cotangent buffers ------------------------------
+        zeros_act = pvary_missing(jnp.zeros((V, M, *X0.shape[1:]), dtype),
+                                  vary_axes)
+        # stage 0's local chunk 0 is global chunk 0: seed its inputs with the
+        # embeddings (garbage elsewhere, masked by the table)
+        act_in = zeros_act.at[0].set(
+            jnp.where(on_stage0, X0.astype(dtype), zeros_act[0]))
+        cot = zeros_act
+        dX0 = pvary_missing(jnp.zeros(X0.shape, dtype), vary_axes)
+
+        # ---- gradient accumulators ---------------------------------------
+        stacked_tmpl = (wbuf_zeros() if partitioned else wbuf0)
+        dW = grad_zeros(stacked_tmpl, lspecs)
+        dsh = grad_zeros(shared_g, outer_specs.get("shared", {}))
+        dfn = grad_zeros(outer_g["final_norm"], outer_specs["final_norm"])
+        demb = grad_zeros(outer_g["embed"], outer_specs["embed"])
+        dhead = (None if tied
+                 else grad_zeros(outer_g["head"], outer_specs["head"]))
+        nll_sum = pvary_missing(jnp.zeros((), jnp.float32), vary_axes)
+
+        # ---- the tick body ------------------------------------------------
+        def head_vjp(xh, hbatch):
+            """Masked head VJP at the loss stage: loss value + cotangent."""
+            def f(fn_p, head_p, embed_p, x):
+                og = dict(outer_g, final_norm=fn_p, embed=embed_p)
+                if not tied:
+                    og["head"] = head_p
+                h = apply_norm(cfg, fn_p, x)
+                nll = T.head_loss(cfg, og, h, hbatch, axis)
+                return nll * inv_n, nll
+
+            if tied:
+                loss, vjp, nll = jax.vjp(
+                    lambda fn_p, embed_p, x: f(fn_p, None, embed_p, x),
+                    outer_g["final_norm"], outer_g["embed"], xh, has_aux=True)
+                dfn_t, demb_t, dxh = vjp(
+                    zp.match_vma(jnp.ones((), loss.dtype), loss))
+                dhead_t = None
+            else:
+                loss, vjp, nll = jax.vjp(
+                    f, outer_g["final_norm"], outer_g["head"],
+                    outer_g["embed"], xh, has_aux=True)
+                dfn_t, dhead_t, demb_t, dxh = vjp(
+                    zp.match_vma(jnp.ones((), loss.dtype), loss))
+            return nll, dfn_t, dhead_t, demb_t, dxh
+
+        def make_tick(wbuf):
+            def tick(carry, xs):
+                (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+                kind = xs["kind"][s]
+                v, mb = xs["v"][s], xs["mb"][s]
+                is_b = kind == simlib.TICK_B
+                g = v * S + s                       # traced global chunk
+                x = act_in[v, mb]
+                dy = cot[v, mb]
+
+                # one masked chunk VJP: the vjp forward IS the F unit's
+                # compute, the pull the B unit's (recompute + transposes)
+                w_chunk = jax.tree.map(
+                    lambda p: lax.dynamic_slice_in_dim(p, v * k_c, k_c, 0),
+                    wbuf)
+
+                def chunk_f(w_c, sh, xc):
+                    w_c = mark_chunk(w_c)
+
+                    def layer_step(xc, j):
+                        lp = jax.tree.map(lambda p: p[j], w_c)
+                        lid = g * k_c + j
+                        x2, _aux = T.apply_layer(
+                            cfg, lp, sh, xc, positions=pos,
+                            window=windows[lid], shared_flag=flags[lid],
+                            axis=axis)
+                        return x2, None
+                    y, _ = compat.scan(layer_step, xc, jnp.arange(k_c))
+                    return y
+
+                y, pull = jax.vjp(chunk_f, w_chunk, shared_g, x)
+                dw_v, dsh_t, dx = pull(zp.match_vma(dy, y))
+
+                # accumulate the B unit's chunk gradient at rows [v*k_c, ...)
+                def acc_dw(Wl, wv):
+                    cur = lax.dynamic_slice_in_dim(Wl, v * k_c, k_c, 0)
+                    upd = cur + jnp.where(is_b, wv.astype(jnp.float32), 0.0)
+                    return lax.dynamic_update_slice_in_dim(Wl, upd,
+                                                           v * k_c, 0)
+                dW = jax.tree.map(acc_dw, dW, dw_v)
+                dsh = jax.tree.map(
+                    lambda a, b: a + jnp.where(is_b, b.astype(jnp.float32),
+                                               0.0), dsh, dsh_t)
+                # backward of global chunk 0 ends the chain: its dx is the
+                # embedding cotangent (only ever unmasked on stage 0)
+                dX0 = dX0.at[mb].set(
+                    jnp.where(is_b & (g == 0), dx.astype(dtype), dX0[mb]))
+
+                # ---- ring 1: forward activation --------------------------
+                recv = lax.ppermute(y.astype(dtype), stage_axis, fwd_perm)
+                fr_valid, fr_fin = xs["fr_valid"][s], xs["fr_fin"][s]
+                fr_v, fr_mb = xs["fr_v"][s], xs["fr_mb"][s]
+                act_in = act_in.at[fr_v, fr_mb].set(
+                    jnp.where(fr_valid & ~fr_fin, recv, act_in[fr_v, fr_mb]))
+
+                # ---- head VJP on the (masked) final arrival --------------
+                hbatch = jax.tree.map(lambda b: b[fr_mb], batch)
+                nll, dfn_t, dhead_t, demb_t, dxh = head_vjp(recv, hbatch)
+                fin = fr_valid & fr_fin
+                nll_sum = nll_sum + jnp.where(fin, nll, 0.0)
+
+                def macc(acc, gt):
+                    return jax.tree.map(
+                        lambda a, b: a + jnp.where(fin,
+                                                   b.astype(jnp.float32),
+                                                   0.0), acc, gt)
+                dfn = macc(dfn, dfn_t)
+                demb = macc(demb, demb_t)
+                if dhead is not None:
+                    dhead_new = macc(dhead, dhead_t)
+                else:
+                    dhead_new = None
+
+                # ---- ring 2: head cotangent to stage S-1 (loss ring) -----
+                recv_h = lax.ppermute(dxh.astype(dtype), stage_axis, rev_perm)
+                hr_valid, hr_mb = xs["hr_valid"][s], xs["hr_mb"][s]
+                cot = cot.at[V - 1, hr_mb].set(
+                    jnp.where(hr_valid, recv_h, cot[V - 1, hr_mb]))
+
+                # ---- ring 3: backward cotangent --------------------------
+                recv_b = lax.ppermute(dx.astype(dtype), stage_axis, rev_perm)
+                br_valid = xs["br_valid"][s]
+                br_v, br_mb = xs["br_v"][s], xs["br_mb"][s]
+                cot = cot.at[br_v, br_mb].set(
+                    jnp.where(br_valid, recv_b, cot[br_v, br_mb]))
+
+                return (act_in, cot, dX0, dW, dsh, dfn, dhead_new, demb,
+                        nll_sum), None
+            return tick
+
+        # ---- run the tick segments (gather boundaries are static) --------
+        carry = (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum)
+        wbuf = wbuf_zeros() if partitioned else wbuf0
+        for (t0, t1, chunks) in segments:
+            if partitioned:
+                for v2 in chunks:
+                    w_v = gather_chunk(v2)
+                    wbuf = jax.tree.map(
+                        lambda W, wv, a=v2 * k_c:
+                            lax.dynamic_update_slice_in_dim(W, wv, a, 0),
+                        wbuf, w_v)
+            if t1 > t0:
+                xs = {k: r[t0:t1] for k, r in ROWS.items()}
+                carry, _ = compat.scan(make_tick(wbuf), carry, xs)
+        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+
+        # ---- embed backward (accumulation.py pattern; dX0 is zero off
+        # stage 0, so the garbage contributions vanish) ---------------------
+        def emb_body(demb_acc, xs):
+            mb, dx = xs
+
+            def f(embed_p):
+                x, _ = T.embed_inputs(cfg, dict(outer_g, embed=embed_p),
+                                      mb, axis)
+                return x
+
+            _, vjp = jax.vjp(f, outer_g["embed"])
+            (de,) = vjp(dx)
+            return jax.tree.map(lambda u, w: u + w.astype(jnp.float32),
+                                demb_acc, de), None
+
+        demb, _ = compat.scan(emb_body, demb, (batch, dX0))
+
+        # ---- reductions ---------------------------------------------------
+        outer_grads = {"embed": demb, "final_norm": dfn, "shared": dsh}
+        if dhead is not None:
+            outer_grads["head"] = dhead
+        outer_grads = {k: v for k, v in outer_grads.items()
+                       if k in outer_store}
+        # pre-vma completion for any in-block replicated OUTER leaves
+        # (shared attention mixes); partitioned layer chunks were completed
+        # inside the per-tick VJP by mark_chunk
+        outer_grads = _complete_block_replicated_grads(outer_grads, axis)
 
         def reduce_outer(g):
-            # complete the stage-replicated outer leaves across stages (see
-            # make_partitioned_pipeline_grad_fn.reduce — embed/head partials
-            # live on the loss stage, `shared` partials on every stage)
-            g = g.astype(jnp.float32)
+            # outer leaves are stage-replicated but their partials live on
+            # the stages that used them (loss stage for embed/head/norm,
+            # every stage for `shared`): the stage psum completes them so all
+            # stages hold identical outer grads — required for consistent
+            # grad-norm clipping and replicated optimizer updates.
             g = lax.psum(g, stage_axis)
             if axis.data:
                 g = lax.psum(g, axis.data)
@@ -547,19 +552,71 @@ def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
                 g = lax.psum(g, axis.pod)
             return g
 
-        def reduce_layer(g):
-            g = g.astype(jnp.float32)
-            if axis.data:
-                g = lax.psum(g, axis.data)
-            if axis.pod:
-                g = lax.psum(g, axis.pod)
-            return g
+        outer_grads = {k: jax.tree.map(reduce_outer, v)
+                       for k, v in outer_grads.items()}
 
-        grads = dict(
-            {k: jax.tree.map(reduce_outer, v)
-             for k, v in grads.items() if k != "layers"},
-            layers=jax.tree.map(reduce_layer, grads["layers"]))
-        metrics = {"loss": nll / ntok, "ntok": ntok}
-        return grads, metrics
+        if partitioned:
+            def scatter_leaf(Wl):
+                """Per-chunk reduce-scatter over `data`: V psum_scatters per
+                leaf per pass, the explicit transpose of gather_chunk."""
+                parts = [zp.scatter_grad_local(
+                    Wl[v2 * k_c:(v2 + 1) * k_c], axis.data, axis.ndata,
+                    stacked=True, pod_axis=axis.pod)
+                    for v2 in range(V)]
+                return jnp.concatenate(parts, axis=0)[None]
+            layer_grads = jax.tree.map(scatter_leaf, dW)
+        else:
+            dW = _complete_block_replicated_grads(dW, axis)
+
+            def reduce_layer(g):
+                if axis.data:
+                    g = lax.psum(g, axis.data)
+                if axis.pod:
+                    g = lax.psum(g, axis.pod)
+                return g[None]                     # [1(stage), K, ...]
+            layer_grads = jax.tree.map(reduce_layer, dW)
+
+        grads = dict(outer_grads, layers=layer_grads)
+
+        nll = jnp.where(on_stage0, nll_sum, 0.0)
+        nll = lax.psum(nll, stage_axis)
+        if axis.data:
+            nll = lax.psum(nll, axis.data)
+        if axis.pod:
+            nll = lax.psum(nll, axis.pod)
+        return grads, {"loss": nll / n_tok, "ntok": n_tok}
 
     return grad_fn
+
+
+# ---------------------------------------------------------------------------
+# Public grad-fn makers (API preserved across the schedule-as-data refactor)
+# ---------------------------------------------------------------------------
+def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
+                          stage_axis: str = "stage", remat: bool = True,
+                          table=None):
+    """grad_fn(params, batch) -> (grads, metrics), inside shard_map, with
+    replicated ``[S, K, ...]`` layer storage.  ``table`` (optional) is a
+    prebuilt ``simulator.TickTable``; by default the spec's own table is
+    emitted.  ``remat`` is accepted for API compatibility: the hand-written
+    per-tick VJP never differentiates through the scan, so there is nothing
+    to rematerialize."""
+    del remat
+    return _make_tick_grad_fn(cfg, axis, spec, None, partitioned=False,
+                              stage_axis=stage_axis, table=table)
+
+
+def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
+                                      spec: PipeSpec, layer_template: PyTree,
+                                      *, stage_axis: str = "stage",
+                                      remat: bool = True, table=None):
+    """grad_fn(params, batch) -> (grads, metrics) with ZeRO-chunked layers
+    ([1, K, n_model, n_data, chunk] fp32 storage; ``layer_template`` holds
+    the global per-layer shapes).  Layer gradients come back reduce-
+    scattered per chunk; the small stage-replicated outer leaves get the
+    explicit stage+data psum (PR-5 invariants preserved by the generic
+    executor)."""
+    del remat
+    return _make_tick_grad_fn(cfg, axis, spec, layer_template,
+                              partitioned=True, stage_axis=stage_axis,
+                              table=table)

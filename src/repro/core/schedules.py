@@ -1,21 +1,36 @@
-"""Tick schedules for pipeline parallelism (paper §4).
+"""Pipeline schedule specs (paper §4).
 
-  naive (GPipe, contiguous layers)   stage s owns layers [s*K, (s+1)*K)
-      outer scan over V = M + S - 1 stage-visits; each visit applies the
-      stage's K layers to one micro-batch, then permutes ONCE.
-      bubble = (S-1) visits = K*(S-1) layer-ticks per stage.
+``PipeSpec`` names a schedule and its shape; the *executable* form of a
+schedule is a tick table emitted by ``planner.simulator.build_tick_table``
+(schedule-as-data) and interpreted by the generic executor in
+core/pipeline.py.  Four schedules lower to tick tables:
+
+  naive/gpipe (contiguous layers)    stage s owns layers [s*K, (s+1)*K)
+      one chunk of K layers per stage; all forwards, flush, all backwards.
+      bubble = K*(S-1) layer-ticks per stage.
 
   modular (paper, round-robin)       stage s owns layers {s, s+S, ...}
-      scan over T = K*M + S - 1 layer-ticks; one layer per tick, permute
-      EVERY tick.  bubble = (S-1) layer-ticks per stage.
+      V = K single-layer chunks per stage; one layer per tick, permute
+      EVERY tick.  bubble = (S-1) layer-ticks per stage.  The modular
+      schedule processes all M micro-batches of one layer consecutively —
+      it *is* layered gradient accumulation per stage, which is why the two
+      methods compose.
 
-The bubble ratio is K = d_l / n_l (the paper's reduction factor); the
-point-to-point traffic ratio is the inverse (modular permutes ~K x more
-bytes, eq. 10 vs 11).  The modular schedule processes all M micro-batches of
-one layer consecutively — it *is* layered gradient accumulation per stage,
-which is why the two methods compose.
+  1f1b (PipeDream-flush)             same placement/bubble as naive, but
+      one-forward-one-backward steady state bounds in-flight activations.
 
-All index math takes traced ``t`` (scan counter) and ``s`` (axis_index).
+  interleaved (Megatron 1F1B)        V round-robin chunks of K/V layers;
+      bubble shrinks ~V x for ~V x more permute rounds.
+
+The bubble ratio naive/modular is K = d_l / n_l (the paper's reduction
+factor); the point-to-point traffic ratio is the inverse (modular permutes
+~K x more bytes, eq. 10 vs 11).
+
+The closed-form tick accounting below covers the two paper schedules
+(modular/naive) and is property-tested against the discrete-event
+simulator; 1f1b/interleaved counts come from their tick tables.  The traced
+per-tick index functions (``modular_tick`` etc.) survive for the closed-form
+tests; the executor itself reads the tick table instead.
 """
 from __future__ import annotations
 
@@ -23,26 +38,74 @@ import dataclasses
 
 import jax.numpy as jnp
 
+# names accepted here; "naive" is the paper's name for gpipe
+KNOWN_SCHEDULES = ("modular", "naive", "gpipe", "1f1b", "interleaved")
+
 
 @dataclasses.dataclass(frozen=True)
 class PipeSpec:
     n_stages: int
     layers_per_stage: int
     n_microbatches: int
-    schedule: str = "modular"        # "modular" | "naive"
+    schedule: str = "modular"    # modular | naive/gpipe | 1f1b | interleaved
+    n_chunks: int = 0            # V (interleaved only; 0 = auto)
 
     def __post_init__(self):
-        assert self.schedule in ("modular", "naive")
+        assert self.schedule in KNOWN_SCHEDULES, \
+            f"unknown schedule {self.schedule!r}; known: {KNOWN_SCHEDULES}"
+        K = self.layers_per_stage
         if self.schedule == "modular":
             assert self.n_microbatches >= self.n_stages, \
                 "modular pipeline needs n_mu >= n_stages"
+            v = K
+        elif self.schedule == "interleaved":
+            v = self.n_chunks or min(2, K)
+            M, S = self.n_microbatches, self.n_stages
+            assert M <= S or M % S == 0, \
+                f"interleaved 1f1b needs n_mu <= n_stages or n_mu % " \
+                f"n_stages == 0 (got M={M}, S={S})"
+        else:
+            v = 1
+        assert K % v == 0, f"chunks {v} must divide layers/stage {K}"
+        object.__setattr__(self, "n_chunks", v)
+
+    # ------------------------------------------------------------------
+    # schedule-as-data handles
+    def sim_config(self):
+        """The planner SimConfig naming the same schedule (single source of
+        truth for unit orders and tick tables)."""
+        from repro.planner import simulator as simlib
+        return simlib.SimConfig(
+            n_stages=self.n_stages, layers_per_stage=self.layers_per_stage,
+            n_microbatches=self.n_microbatches, schedule=self.schedule,
+            n_chunks=self.n_chunks if self.schedule == "interleaved" else 0)
+
+    def tick_table(self):
+        """The executable tick table for this spec (simulator-emitted)."""
+        from repro.planner import simulator as simlib
+        return simlib.build_tick_table(self.sim_config())
+
+    @property
+    def layers_per_chunk(self) -> int:
+        return self.layers_per_stage // self.n_chunks
 
     @property
     def num_layers(self) -> int:
         return self.n_stages * self.layers_per_stage
 
+    # ------------------------------------------------------------------
+    # Closed-form accounting for the two paper schedules.  The property
+    # tests in tests/test_planner.py assert these agree with the discrete-
+    # event simulator, so the closed forms stay honest; the 1f1b and
+    # interleaved counts have no closed form here — use tick_table().
+    def _closed_form(self):
+        assert self.schedule in ("modular", "naive"), \
+            f"closed-form tick accounting covers modular/naive only " \
+            f"(schedule {self.schedule!r}: use tick_table())"
+
     @property
     def total_outer_steps(self) -> int:
+        self._closed_form()
         S, K, M = self.n_stages, self.layers_per_stage, self.n_microbatches
         return K * M + S - 1 if self.schedule == "modular" else M + S - 1
 
@@ -53,6 +116,7 @@ class PipeSpec:
 
     @property
     def bubble_layer_ticks(self) -> int:
+        self._closed_form()
         S, K = self.n_stages, self.layers_per_stage
         return (S - 1) if self.schedule == "modular" else K * (S - 1)
 
@@ -65,11 +129,6 @@ class PipeSpec:
         """Number of ppermute rounds (p2p transfers per stage)."""
         return self.total_outer_steps
 
-    # ------------------------------------------------------------------
-    # Planner-facing accounting.  These are the quantities the discrete-event
-    # simulator (repro.planner.simulator) derives from its event counts; the
-    # property tests in tests/test_planner.py assert the two agree for both
-    # schedules, so the closed forms here stay honest.
     @property
     def compute_layer_ticks(self) -> int:
         """Busy (non-bubble) layer-ticks per stage: K*M, schedule-invariant."""
@@ -80,6 +139,7 @@ class PipeSpec:
         """Useful forward boundary transfers a stage issues: one per payload-
         carrying permute (modular: every busy layer-tick, K*M; naive: once per
         stage-visit, M), counting the final-layer wrap to the loss stage."""
+        self._closed_form()
         M = self.n_microbatches
         if self.schedule == "modular":
             return self.layers_per_stage * M
@@ -101,7 +161,7 @@ class PipeSpec:
         return self.permutes * self.p2p_bytes_per_tick(act_bytes)
 
     # ------------------------------------------------------------------
-    # modular: per layer-tick state
+    # modular: per layer-tick state (closed-form test surface)
     def modular_tick(self, t, s):
         """(busy, mb, weight_idx r, global_layer) at tick t for stage s."""
         S, K, M = self.n_stages, self.layers_per_stage, self.n_microbatches
@@ -124,7 +184,7 @@ class PipeSpec:
         return valid, nc % M, is_final
 
     # ------------------------------------------------------------------
-    # naive: per stage-visit state
+    # naive: per stage-visit state (closed-form test surface)
     def naive_visit(self, v, s):
         """(busy, mb) for visit v at stage s (the visit runs all K layers)."""
         M = self.n_microbatches

@@ -320,11 +320,15 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh):
 
 def build_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, spec,
                               opt_cfg: AdamConfig, *, partitioned: bool = True,
-                              donate: bool = True, remat: bool = True):
+                              donate: bool = True, remat: bool = True,
+                              table=None):
     """Returns jitted ``step(storage, opt, batch) -> (storage, opt, metrics)``
     for the pipelined training path (the paper's full method when
-    ``partitioned``): modular/naive pipeline over a mesh with a leading
-    `stage` axis, optionally composed with `data` and `model` axes.
+    ``partitioned``): any executable schedule (modular/naive/1f1b/
+    interleaved) over a mesh with a leading `stage` axis, optionally composed
+    with `data` and `model` axes.  The schedule is data: ``table`` is the
+    simulator-emitted tick table to interpret (built from ``spec`` when not
+    given — pass a plan-embedded table to execute exactly what was planned).
 
     Storage: outer leaves stage-replicated in their full compute layout;
     layer leaves as ``[S, K, ...]`` stage stacks (replicated) or
@@ -339,14 +343,18 @@ def build_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, spec,
     assert "stage" in mesh.axis_names, mesh.axis_names
     if partitioned:
         assert axis.data, "partitioned pipeline storage needs a `data` axis"
+    if table is None:
+        table = spec.tick_table()
+    table.validate_executable()       # fail fast, before any tracing
     tmpl = full_template(cfg)
     layer_template = jax.tree.map(
         lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tmpl["layers"])
     if partitioned:
         grad_fn = pp.make_partitioned_pipeline_grad_fn(
-            cfg, axis, spec, layer_template, remat=remat)
+            cfg, axis, spec, layer_template, remat=remat, table=table)
     else:
-        grad_fn = pp.make_pipeline_grad_fn(cfg, axis, spec, remat=remat)
+        grad_fn = pp.make_pipeline_grad_fn(cfg, axis, spec, remat=remat,
+                                           table=table)
     sspecs = pipeline_storage_specs(cfg, axis, partitioned)
     sq_reduce = make_pipeline_sq_reduce(cfg, axis, partitioned)
     ospecs = {"mu": sspecs, "nu": sspecs, "step": P()}

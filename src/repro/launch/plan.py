@@ -83,6 +83,9 @@ def main(argv=None) -> dict:
                          "--smoke (S > 1 plans a stage x data x model mesh "
                          "running the modular pipeline)")
     ap.add_argument("--out", default=None, help="write the plan JSON here")
+    ap.add_argument("--dump-table", action="store_true",
+                    help="print the winner's embedded tick table (the "
+                         "schedule-as-data contract launch.train interprets)")
     args = ap.parse_args(argv)
 
     if args.arch.startswith("paper-x") or args.arch == "paper-x":
@@ -109,8 +112,22 @@ def main(argv=None) -> dict:
             args.arch, devices=devices, global_batch=args.global_batch,
             seq_len=args.seq_len, steps=args.steps, microbatch_options=mus,
             stage_options=stages, smoke=args.smoke)
-        print(json.dumps(doc["execution"], indent=1))
+        shown = {k: v for k, v in doc["execution"].items()
+                 if k != "tick_table"}
+        print(json.dumps(shown, indent=1))
         print(f"({len(doc['plans'])} ranked executions; winner above)")
+        if args.dump_table:
+            tt = doc["execution"].get("tick_table")
+            if tt is None:
+                print("(winner is not pipelined: no tick table)")
+            else:
+                from repro.planner.simulator import TickTable
+                tab = TickTable.from_json(tt)
+                print(f"tick table: schedule={tab.schedule} "
+                      f"S={tab.n_stages} V={tab.n_chunks} "
+                      f"k_c={tab.layers_per_chunk} M={tab.n_microbatches} "
+                      f"T={tab.n_ticks}")
+                print(json.dumps(tt))
 
     if args.out:
         planlib.save_plan(doc, args.out)

@@ -64,6 +64,9 @@ def apply_plan(args, argv) -> None:
     take("--schedule", "schedule", "schedule")
     if "partitioned" in ex and "--no-partition" not in passed:
         args.no_partition = not ex["partitioned"]
+    # schedule-as-data: a pipelined plan embeds the tick table it scored;
+    # carry it along so the executor interprets exactly that table
+    args.plan_tick_table = ex.get("tick_table")
 
 
 def main(argv=None) -> dict:
@@ -89,15 +92,18 @@ def main(argv=None) -> dict:
                     help="data x model, e.g. 2x2 (needs that many devices)")
     ap.add_argument("--stages", type=int, default=1,
                     help="pipeline stages; > 1 trains on a stage x data x "
-                         "model mesh through the modular/naive pipeline")
+                         "model mesh through the generic tick-table executor")
     ap.add_argument("--schedule", default="modular",
-                    choices=["modular", "naive"],
-                    help="pipeline tick schedule (used when --stages > 1)")
+                    help="pipeline schedule (used when --stages > 1): "
+                         "modular | naive/gpipe | 1f1b | interleaved "
+                         "(validated against the executable set, so a plan "
+                         "naming an unsupported schedule fails fast)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
+    args.plan_tick_table = None
     if args.plan:
         apply_plan(args, argv if argv is not None else sys.argv[1:])
     if not args.arch:
@@ -112,24 +118,45 @@ def main(argv=None) -> dict:
     opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                          decay_steps=args.steps)
     if args.stages > 1:
-        # pipelined path: modular pipeline IS layered accumulation per stage,
-        # so --method does not apply here
+        from repro.planner import simulator as simlib
+
+        # pipelined path: schedule-as-data.  Fail fast, legibly, on any
+        # schedule the generic executor cannot interpret — whether it came
+        # from --schedule or from a plan's execution section.
+        from repro.core.schedules import KNOWN_SCHEDULES
+        if args.schedule not in KNOWN_SCHEDULES:
+            ap.error(
+                f"--schedule {args.schedule!r} is not executable; the tick-"
+                f"table executor runs: "
+                f"{', '.join(simlib.EXECUTABLE_SCHEDULES)} "
+                f"(aliases: naive = gpipe)")
         if cfg.num_layers % args.stages:
             ap.error(f"--stages {args.stages} does not divide "
                      f"num_layers={cfg.num_layers}")
-        if args.schedule == "modular" and args.microbatches < args.stages:
-            ap.error(f"the modular schedule needs --microbatches >= --stages "
-                     f"(got {args.microbatches} < {args.stages})")
-        spec = PipeSpec(n_stages=args.stages,
-                        layers_per_stage=cfg.num_layers // args.stages,
-                        n_microbatches=args.microbatches,
-                        schedule=args.schedule)
-        if partitioned and spec.schedule != "modular":
-            ap.error("--schedule naive cannot be combined with the "
-                     "partitioned state (use --no-partition)")
-        step = stepfn.build_pipeline_train_step(cfg, mesh, spec, opt_cfg,
-                                                partitioned=partitioned,
-                                                donate=False)
+        try:
+            spec = PipeSpec(n_stages=args.stages,
+                            layers_per_stage=cfg.num_layers // args.stages,
+                            n_microbatches=args.microbatches,
+                            schedule=args.schedule)
+        except AssertionError as e:
+            ap.error(f"infeasible pipeline shape for schedule "
+                     f"{args.schedule!r}: {e}")
+        table = None
+        if args.plan_tick_table is not None:
+            table = simlib.TickTable.from_json(args.plan_tick_table)
+            if (table.schedule, table.n_stages, table.n_microbatches) != \
+                    (spec.schedule, spec.n_stages, spec.n_microbatches):
+                ap.error(
+                    f"plan tick table ({table.schedule}, S={table.n_stages}, "
+                    f"M={table.n_microbatches}) does not match the resolved "
+                    f"execution (schedule={spec.schedule}, S={spec.n_stages}, "
+                    f"M={spec.n_microbatches})")
+        try:
+            step = stepfn.build_pipeline_train_step(
+                cfg, mesh, spec, opt_cfg, partitioned=partitioned,
+                donate=False, table=table)
+        except NotImplementedError as e:
+            ap.error(str(e))   # non-executable tick kinds (zero-bubble stub)
         storage = stepfn.init_pipeline_storage(
             cfg, mesh, jax.random.PRNGKey(args.seed), spec,
             partitioned=partitioned)

@@ -91,11 +91,14 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
     plan, so ``launch.train --plan`` runs the same config that was costed).
 
     ``stage_options`` adds pipelined candidates: each stage count S > 1
-    splits the devices into a stage x data x model mesh and runs the modular
-    pipeline (= layered accumulation per stage), priced with its bubble
-    fraction and per-tick p2p traffic.  The winner's ``execution`` section
-    carries the ``stages``/``schedule`` fields ``launch.train --plan``
-    needs to build the pipelined step.
+    splits the devices into a stage x data x model mesh and ranks every
+    executable schedule (modular / 1f1b / interleaved), priced from its
+    simulator-emitted tick table — T ticks of one masked chunk VJP + head
+    VJP + three ring permutes each, exactly the generic executor's per-tick
+    cost (simulator.predict_spmd_composition).  The winner's ``execution``
+    section carries the ``stages``/``schedule`` fields AND the embedded
+    ``tick_table`` JSON, so ``launch.train --plan`` interprets the very
+    table that was scored (schedule-as-data).
 
     Scoring mirrors the paper's accounting at smoke scale: per-device compute
     (fwd + recompute + transposed dots), data-axis ZeRO/reduction bytes
@@ -106,10 +109,17 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
     """
     from repro import configs
     from repro.core import roofline
+    from repro.core.schedules import PipeSpec
+    from repro.planner import simulator as simlib
     from repro.planner import validate as V
+
+    # ranked preference among equal scores: paper schedule first (it is the
+    # flop/byte minimum or ties it at K == 1, where all three coincide)
+    sched_rank = {"modular": 0, "interleaved": 1, "1f1b": 2}
 
     cfg0 = configs.get_config(arch, smoke=smoke)
     rows = []
+    tables: dict[tuple, simlib.TickTable] = {}
     for S in sorted(set(stage_options)):
         if devices % S:
             continue
@@ -122,66 +132,92 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
             for M in microbatch_options:
                 if global_batch % (M * d) or global_batch < M * d:
                     continue
-                if S > 1 and M < S:
-                    continue            # modular schedule needs n_mu >= S
                 mb_local = global_batch // (M * d)
                 tc = V.traced_layer_costs(cfg, mb_local, seq_len)
                 f_dev = tc.flops_fwd_layer / mdl
                 head_dev = tc.flops_head / mdl
-                # per-device layer compute: a pipeline stage runs K of the L
-                # layers, stretched by the bubble fraction of its schedule
-                compute_s = (4.0 * K * M * f_dev + 3.0 * M * head_dev) \
-                    / roofline.PEAK_FLOPS
-                p2p_s = 0.0
-                if S > 1:
-                    bubble = (K * M) / (K * M + S - 1)
-                    compute_s = compute_s / bubble
-                    # modular: one boundary activation per layer-tick, both
-                    # directions (fwd + bwd ring)
-                    p2p_s = (2.0 * (K * M + S - 1) * tc.act_bytes
-                             / roofline.ICI_BW)
                 ring_d = (d - 1) / d if d > 1 else 0.0
                 ring_m = (mdl - 1) / mdl if mdl > 1 else 0.0
                 # un-overlapped Megatron psums: ~4 per layer per micro-batch
                 # (attn out + mlp out, fwd + bwd), payload = one activation
                 tp_s = (4.0 * K * M * 2.0 * ring_m * tc.act_bytes
                         / roofline.ICI_BW)
-                for method in (("layered",) if S > 1
-                               else ("layered", "standard")):
-                    for part in ((False, True) if d > 1 else (False,)):
-                        if part:
-                            per_layer = 3.0 * ring_d * tc.layer_bytes
-                            n_coll = K * (M if method == "standard" else 1)
-                            data_bytes = (n_coll * per_layer
-                                          + 3.0 * ring_d * tc.outer_bytes
-                                          * (M if method == "standard" else 1))
-                        else:
-                            data_bytes = 2.0 * ring_d * (
-                                K * tc.layer_bytes + tc.outer_bytes)
-                        data_s = data_bytes / roofline.ICI_BW
-                        if method == "layered":
-                            step_s = max(compute_s, data_s) + tp_s + p2p_s
-                        else:
-                            step_s = compute_s + data_s + tp_s + p2p_s
-                        rows.append({
-                            "mesh": f"{d}x{mdl}",
-                            "stages": S,
-                            "schedule": "modular" if S > 1 else None,
-                            "method": method,
-                            "partitioned": part,
-                            "microbatches": M,
-                            "score_step_s": step_s,
-                            "compute_s": compute_s,
-                            "data_coll_s": data_s,
-                            "tp_coll_s": tp_s,
-                            "p2p_s": p2p_s,
-                        })
+                # (schedule, compute_s, p2p_s, table) candidates for this cell
+                cands = []
+                if S == 1:
+                    compute_s = (4.0 * K * M * f_dev
+                                 + 3.0 * M * head_dev) / roofline.PEAK_FLOPS
+                    cands.append((None, compute_s, 0.0, None))
+                else:
+                    for sched in ("modular", "interleaved", "1f1b"):
+                        try:
+                            spec = PipeSpec(S, K, M, sched)
+                            table = tables.get((S, K, M, sched))
+                            if table is None:
+                                table = spec.tick_table()
+                                tables[(S, K, M, sched)] = table
+                        except (AssertionError, simlib.DeadlockError):
+                            continue    # infeasible shape for this schedule
+                        T_ = table.n_ticks
+                        k_c = table.layers_per_chunk
+                        # the generic executor's per-tick cost: one masked
+                        # chunk VJP + one masked head VJP + 3 ring permutes
+                        # (simulator.predict_spmd_composition)
+                        compute_s = T_ * (3.0 * k_c * f_dev
+                                          + 3.0 * head_dev) \
+                            / roofline.PEAK_FLOPS
+                        p2p_s = 3.0 * T_ * tc.act_bytes / roofline.ICI_BW
+                        cands.append((sched, compute_s, p2p_s, table))
+                for sched, compute_s, p2p_s, table in cands:
+                    for method in (("layered",) if S > 1
+                                   else ("layered", "standard")):
+                        for part in ((False, True) if d > 1 else (False,)):
+                            if part:
+                                if S > 1:
+                                    # tick executor: gather + scatter each
+                                    # chunk once per pass (no AD re-gather)
+                                    data_bytes = (2.0 * ring_d * K
+                                                  * tc.layer_bytes
+                                                  + 2.0 * ring_d
+                                                  * tc.outer_bytes)
+                                else:
+                                    per_layer = 3.0 * ring_d * tc.layer_bytes
+                                    n_coll = K * (M if method == "standard"
+                                                  else 1)
+                                    data_bytes = (
+                                        n_coll * per_layer
+                                        + 3.0 * ring_d * tc.outer_bytes
+                                        * (M if method == "standard" else 1))
+                            else:
+                                data_bytes = 2.0 * ring_d * (
+                                    K * tc.layer_bytes + tc.outer_bytes)
+                            data_s = data_bytes / roofline.ICI_BW
+                            if method == "layered":
+                                step_s = max(compute_s, data_s) + tp_s + p2p_s
+                            else:
+                                step_s = compute_s + data_s + tp_s + p2p_s
+                            rows.append({
+                                "mesh": f"{d}x{mdl}",
+                                "stages": S,
+                                "schedule": sched,
+                                "n_ticks": (table.n_ticks if table is not None
+                                            else None),
+                                "method": method,
+                                "partitioned": part,
+                                "microbatches": M,
+                                "score_step_s": step_s,
+                                "compute_s": compute_s,
+                                "data_coll_s": data_s,
+                                "tp_coll_s": tp_s,
+                                "p2p_s": p2p_s,
+                            })
     if not rows:
         raise ValueError(
             f"no feasible execution for arch={arch} devices={devices} "
             f"global_batch={global_batch} microbatches={microbatch_options} "
             f"stages={stage_options}")
-    rows.sort(key=lambda r: (r["score_step_s"], not r["partitioned"]))
+    rows.sort(key=lambda r: (r["score_step_s"], not r["partitioned"],
+                             sched_rank.get(r["schedule"], 0)))
     win = rows[0]
     execution = {
         "arch": arch,
@@ -197,6 +233,17 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
     if win["stages"] > 1:
         execution["stages"] = win["stages"]
         execution["schedule"] = win["schedule"]
+        # schedule-as-data: embed the scored tick table so launch.train
+        # interprets exactly what the planner priced (launch.plan
+        # --dump-table prints it for inspection)
+        spec_k = None
+        for key in tables:
+            if (key[0] == win["stages"] and key[2] == win["microbatches"]
+                    and key[3] == win["schedule"]):
+                spec_k = key
+                break
+        assert spec_k is not None
+        execution["tick_table"] = tables[spec_k].to_json()
     return {
         "version": PLAN_VERSION,
         "kind": "execution",

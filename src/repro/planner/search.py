@@ -80,9 +80,14 @@ class Plan:
         return {"stage": self.n_l, "data": self.n_b, "model": self.n_a}
 
     def row(self) -> dict:
+        from repro.planner import simulator as simlib
         out = {
             "family": self.family, "schedule": self.schedule,
             "method": self.method, "partitioned": self.partitioned,
+            # the generic tick-table executor (core/pipeline.py) can run this
+            # schedule; zero-bubble variants stay analysis-only for now
+            "executable": simlib.canonical_schedule(self.schedule)
+            in simlib.EXECUTABLE_SCHEDULES,
             "offload": self.offload,
             "n_a": self.n_a, "n_l": self.n_l, "n_b": self.n_b,
             "n_mu": self.n_mu, "b_mu": self.b_mu, "n_chunks": self.n_chunks,

@@ -53,6 +53,16 @@ from typing import Any
 SCHEDULES = ("gpipe", "modular", "1f1b", "interleaved")
 _ALIASES = {"naive": "gpipe"}
 
+# Tick kinds of the executable tick table (core/pipeline.py interprets these;
+# the integer values are part of the plan-JSON contract).  BDGRAD/BWGRAD are
+# the zero-bubble split — emitted by build_tick_table(split_backward=True) as
+# a forward-looking stub, but not yet interpretable (see
+# TickTable.validate_executable and ROADMAP "zero-bubble follow-up").
+TICK_IDLE, TICK_F, TICK_B, TICK_BDGRAD, TICK_BWGRAD = 0, 1, 2, 3, 4
+EXECUTABLE_TICK_KINDS = (TICK_IDLE, TICK_F, TICK_B)
+# every schedule in SCHEDULES lowers to executable tick kinds today
+EXECUTABLE_SCHEDULES = SCHEDULES
+
 
 def canonical_schedule(name: str) -> str:
     name = _ALIASES.get(name, name)
@@ -262,6 +272,265 @@ def _one_f_one_b(f: list, b: list, *, warmup: int) -> list:
 # ---------------------------------------------------------------------------
 class DeadlockError(RuntimeError):
     pass
+
+
+# ---------------------------------------------------------------------------
+# Executable tick tables (schedule-as-data)
+# ---------------------------------------------------------------------------
+# A tick table is the lockstep SPMD rendering of a schedule's stage_order:
+# T rows, one per global tick; each row assigns every stage at most one
+# (kind, chunk, micro-batch) unit.  core/pipeline.py interprets the table
+# with one generic scan — the table (not the executor) is where schedules
+# differ, so the simulator stays the single source of truth.
+#
+# Chunk placement is uniform across schedules: stage s's local chunk v is
+# global chunk g = v*S + s, holding global layers [g*k_c, (g+1)*k_c).  For
+# the V=1 schedules (gpipe/1f1b) this reduces to g = s (contiguous blocks);
+# for modular (V=K, k_c=1) it is the paper's round-robin placement.  A handy
+# invariant follows: g mod S is the owning stage and g // S its local slot,
+# and consecutive global chunks are always one forward ring hop apart.
+@dataclasses.dataclass(frozen=True)
+class TickTable:
+    """Static schedule table interpreted by core/pipeline.py.
+
+    Core arrays are [T][S] ints: ``kind`` (TICK_* code), ``unit_v`` (local
+    chunk), ``unit_mb`` (micro-batch); idle rows carry zeros.  The derived
+    recv tables (what each stage's ring recv means at the END of tick t) are
+    recomputed from the core arrays, never serialized:
+
+      frecv_*   forward-ring recv: valid, receiver-side chunk slot, micro-
+                batch, and whether it is the final network output (head input
+                arriving at the loss stage 0)
+      hrecv_*   loss-ring recv at stage S-1: the head cotangent for the last
+                chunk, emitted the same tick the final output arrives
+      brecv_*   backward-ring recv: valid, receiver-side chunk slot, micro-
+                batch of an upstream dx cotangent
+    """
+    schedule: str
+    n_stages: int
+    n_chunks: int                 # V: local chunks per stage
+    layers_per_chunk: int         # k_c
+    n_microbatches: int
+    kind: tuple                   # [T][S] TICK_* codes
+    unit_v: tuple                 # [T][S] local chunk index
+    unit_mb: tuple                # [T][S] micro-batch index
+    frecv_valid: tuple
+    frecv_v: tuple
+    frecv_mb: tuple
+    frecv_final: tuple
+    hrecv_valid: tuple
+    hrecv_mb: tuple
+    brecv_valid: tuple
+    brecv_v: tuple
+    brecv_mb: tuple
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.kind)
+
+    @property
+    def n_global_chunks(self) -> int:
+        return self.n_chunks * self.n_stages
+
+    def validate_executable(self) -> None:
+        """Raise if the table contains tick kinds the generic executor
+        (core/pipeline.py) cannot interpret yet."""
+        bad = sorted({k for row in self.kind for k in row
+                      if k not in EXECUTABLE_TICK_KINDS})
+        if bad:
+            raise NotImplementedError(
+                f"tick table for schedule {self.schedule!r} contains "
+                f"non-executable tick kinds {bad} (zero-bubble dgrad/wgrad "
+                f"split is a planned follow-up); executable schedules: "
+                f"{', '.join(EXECUTABLE_SCHEDULES)}")
+
+    def gather_segments(self) -> list:
+        """Partition of [0, T) at ZeRO weight-gather boundaries: a list of
+        ``(t0, t1, chunks)`` where ``chunks`` are the local chunk indices
+        whose weights must be gathered before tick ``t0`` (first forward
+        use at any stage).  Exactly V gathers per pass, total."""
+        first_use = {}
+        for t, row in enumerate(self.kind):
+            for s, k in enumerate(row):
+                if k in (TICK_F, TICK_B, TICK_BDGRAD, TICK_BWGRAD):
+                    v = self.unit_v[t][s]
+                    first_use.setdefault(v, t)
+        for v in range(self.n_chunks):
+            first_use.setdefault(v, 0)
+        bounds = sorted({t for t in first_use.values()} | {0})
+        segs = []
+        for i, t0 in enumerate(bounds):
+            t1 = bounds[i + 1] if i + 1 < len(bounds) else self.n_ticks
+            segs.append((t0, t1, sorted(v for v, t in first_use.items()
+                                        if t == t0)))
+        return segs
+
+    def predicted_collectives(self, *, partitioned: bool,
+                              n_layer_leaves: int = 1) -> dict:
+        """Collective op counts of the lowered executor, per optimizer step —
+        the numbers the conformance tests pin against the jaxpr.  The
+        executor issues exactly three ring permutes per tick (forward
+        activation, head cotangent, backward cotangent) and, when
+        partitioned, one data-axis all_gather per (layer leaf, local chunk)
+        plus one psum_scatter per (layer leaf, local chunk)."""
+        out = {"ppermute_stage": 3 * self.n_ticks}
+        if partitioned:
+            out["all_gather_data"] = self.n_chunks * n_layer_leaves
+            out["psum_scatter_data"] = self.n_chunks * n_layer_leaves
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "schedule": self.schedule,
+            "n_stages": self.n_stages,
+            "n_chunks": self.n_chunks,
+            "layers_per_chunk": self.layers_per_chunk,
+            "n_microbatches": self.n_microbatches,
+            "n_ticks": self.n_ticks,
+            "kind": [list(r) for r in self.kind],
+            "v": [list(r) for r in self.unit_v],
+            "mb": [list(r) for r in self.unit_mb],
+            "predicted_collectives": self.predicted_collectives(
+                partitioned=True),
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "TickTable":
+        return _finish_table(doc["schedule"], doc["n_stages"],
+                             doc["n_chunks"], doc["layers_per_chunk"],
+                             doc["n_microbatches"],
+                             [list(r) for r in doc["kind"]],
+                             [list(r) for r in doc["v"]],
+                             [list(r) for r in doc["mb"]])
+
+
+def _finish_table(schedule, S, V, k_c, M, kind, unit_v, unit_mb) -> TickTable:
+    """Derive the recv tables from the core (kind, v, mb) arrays."""
+    T_ = len(kind)
+    n_g = V * S
+    z = lambda: [[0] * S for _ in range(T_)]
+    fr_valid, fr_v, fr_mb, fr_fin = z(), z(), z(), z()
+    hr_valid, hr_mb = z(), z()
+    br_valid, br_v, br_mb = z(), z(), z()
+    for t in range(T_):
+        for s in range(S):
+            # forward ring: stage s receives from (s-1) % S
+            snd = (s - 1) % S
+            if kind[t][snd] == TICK_F:
+                g = unit_v[t][snd] * S + snd
+                fr_valid[t][s] = 1
+                fr_mb[t][s] = unit_mb[t][snd]
+                if g == n_g - 1:
+                    fr_fin[t][s] = 1          # head input at the loss stage
+                else:
+                    fr_v[t][s] = (g + 1) // S  # receiver-side chunk slot
+            # backward ring: stage s receives from (s+1) % S
+            snd = (s + 1) % S
+            if kind[t][snd] in (TICK_B, TICK_BDGRAD):
+                g = unit_v[t][snd] * S + snd
+                if g > 0:
+                    br_valid[t][s] = 1
+                    br_v[t][s] = (g - 1) // S
+                    br_mb[t][s] = unit_mb[t][snd]
+        # loss ring: the tick a final output reaches stage 0, its head
+        # cotangent rides the reverse ring to stage S-1 within the same tick
+        if fr_fin[t][0]:
+            hr_valid[t][S - 1] = 1
+            hr_mb[t][S - 1] = fr_mb[t][0]
+    tt = lambda rows: tuple(tuple(r) for r in rows)
+    return TickTable(
+        schedule=schedule, n_stages=S, n_chunks=V, layers_per_chunk=k_c,
+        n_microbatches=M, kind=tt(kind), unit_v=tt(unit_v),
+        unit_mb=tt(unit_mb), frecv_valid=tt(fr_valid), frecv_v=tt(fr_v),
+        frecv_mb=tt(fr_mb), frecv_final=tt(fr_fin), hrecv_valid=tt(hr_valid),
+        hrecv_mb=tt(hr_mb), brecv_valid=tt(br_valid), brecv_v=tt(br_v),
+        brecv_mb=tt(br_mb))
+
+
+def build_tick_table(sim: SimConfig, *, split_backward: bool = False
+                     ) -> TickTable:
+    """Lockstep-schedule ``stage_order`` into an executable tick table.
+
+    List scheduling over integer ticks, at most one unit per stage per tick,
+    head-of-line per stage (same discipline as the event engine, with unit
+    compute times and next-tick arrivals).  Readiness mirrors the executor's
+    in-tick dataflow — a value produced at tick t is usable from tick t+1:
+
+      F(g, mb)       g == 0, or F(g-1, mb) ran at an earlier tick (the
+                     activation arrived over the forward ring)
+      B(n_g-1, mb)   F(n_g-1, mb) ran at an earlier tick: the final output
+                     wrapped to stage 0, whose head VJP + loss-ring permute
+                     delivered the cotangent within that same tick
+      B(g, mb)       B(g+1, mb) ran at an earlier tick (dx arrived over the
+                     backward ring)
+
+    ``split_backward=True`` emits the zero-bubble stub: B ticks become
+    BDGRAD in place and the weight-gradient halves (BWGRAD) are appended as
+    a tail — structurally a tick table, but rejected by
+    ``TickTable.validate_executable`` until the executor learns the split.
+    """
+    assert sim.include_backward, "tick tables describe full grad passes"
+    S, M, V = sim.n_stages, sim.n_microbatches, sim.n_chunks
+    n_g = V * S
+    orders = [deque(stage_order(sim, s)) for s in range(S)]
+    f_done: dict[tuple[int, int], int] = {}
+    b_done: dict[tuple[int, int], int] = {}
+    kind, unit_v, unit_mb = [], [], []
+    t = 0
+    while any(orders):
+        row_k, row_v, row_mb = [TICK_IDLE] * S, [0] * S, [0] * S
+        progressed = False
+        for s in range(S):
+            if not orders[s]:
+                continue
+            knd, v, mb = orders[s][0]
+            g = v * S + s
+            if knd == "F":
+                ok = g == 0 or f_done.get((g - 1, mb), t) < t
+            elif g == n_g - 1:
+                ok = f_done.get((g, mb), t) < t
+            else:
+                ok = b_done.get((g + 1, mb), t) < t
+            if not ok:
+                continue
+            orders[s].popleft()
+            progressed = True
+            row_v[s], row_mb[s] = v, mb
+            if knd == "F":
+                row_k[s] = TICK_F
+                f_done[(g, mb)] = t
+            else:
+                row_k[s] = TICK_B
+                b_done[(g, mb)] = t
+        if not progressed:
+            stuck = {s: orders[s][0] for s in range(S) if orders[s]}
+            raise DeadlockError(
+                f"tick table for {sim.schedule} deadlocked at tick {t}; "
+                f"heads: {stuck}")
+        kind.append(row_k)
+        unit_v.append(row_v)
+        unit_mb.append(row_mb)
+        t += 1
+    if split_backward:
+        wgrad = [[], [], []]
+        for tr_k, tr_v, tr_mb in zip(kind, unit_v, unit_mb):
+            pend_k, pend_v, pend_mb = [TICK_IDLE] * S, [0] * S, [0] * S
+            any_b = False
+            for s in range(S):
+                if tr_k[s] == TICK_B:
+                    tr_k[s] = TICK_BDGRAD
+                    pend_k[s], pend_v[s], pend_mb[s] = \
+                        TICK_BWGRAD, tr_v[s], tr_mb[s]
+                    any_b = True
+            if any_b:
+                wgrad[0].append(pend_k)
+                wgrad[1].append(pend_v)
+                wgrad[2].append(pend_mb)
+        kind += wgrad[0]
+        unit_v += wgrad[1]
+        unit_mb += wgrad[2]
+    return _finish_table(sim.schedule, S, V, sim.layers_per_chunk, M,
+                         kind, unit_v, unit_mb)
 
 
 def _simulate_serving(sim: SimConfig, cost: CostModel) -> SimResult:
@@ -597,34 +866,43 @@ def simulate(sim: SimConfig, cost: CostModel, *,
 # SPMD lowering equivalents (cross-validation against core/roofline.py)
 # ---------------------------------------------------------------------------
 def predict_spmd_composition(spec, cost: CostModel, *,
-                             fwd_extra_flops: float = 0.0,
-                             bwd_extra_flops: float = 0.0,
-                             bwd_p2p_mult: float = 1.0,
-                             extra_coll_bytes: float = 0.0) -> dict:
-    """Predicted per-device cost composition of the repo's SPMD pipeline
-    lowering (core/pipeline.py) for a ``schedules.PipeSpec``.
+                             head_flops: float = 0.0,
+                             extra_coll_bytes: float = 0.0,
+                             table: "TickTable | None" = None) -> dict:
+    """Predicted per-device cost composition of the repo's SPMD tick-table
+    executor (core/pipeline.py) for a ``schedules.PipeSpec``.
 
-    The SPMD program differs from the event-level ideal in two accounted
-    ways: bubble ticks burn real flops on garbage, and every tick permutes.
-    Backward multipliers (verified against the lowered jaxpr): the per-tick
-    remat re-runs the forward dots (recompute) and adds their transposes —
-    ``flops_bwd_layer ~= 3x fwd`` — but the *recomputed forward ppermute is
-    dead code* in the transpose (no cotangent consumes its primal output, so
-    it is DCE'd), leaving exactly one transposed permute per tick:
-    ``bwd_p2p_mult = 1``.  ``*_extra_flops`` carry the stage-replicated
-    embed/head work (per device, whole step); ``extra_coll_bytes`` the
-    non-permute wire bytes of the lowering (the end-of-step stage psum
-    completing the stage-replicated outer-leaf gradients).  Compare against
-    ``roofline.analyze`` on the lowered grad fn.
+    The executor's accounting, derived from its construction and pinned
+    against the lowered jaxpr by the conformance tests:
+
+      * every tick, every stage runs ONE masked chunk VJP — forward plus its
+        transposed dots, ``3x`` the forward dot flops per layer (the same
+        bundle the remat'd AD path paid, collapsed into a single tick) — on
+        garbage during bubble ticks;
+      * every tick, the loss stage's masked head VJP runs stage-replicated:
+        ``3x head_flops`` per tick on every device;
+      * every tick permutes THREE ring payloads (forward activation, head
+        cotangent, backward cotangent), each one micro-batch boundary
+        activation.
+
+    ``extra_coll_bytes`` carries the non-permute wire bytes (the end-of-step
+    stage psum completing the stage-replicated outer-leaf gradients).
+    Compare against ``roofline.analyze`` on the lowered grad fn.
     """
-    layer_ticks = spec.layer_ticks_per_stage          # includes bubble ticks
-    flops = (layer_ticks * (cost.flops_fwd_layer + cost.flops_bwd_layer)
-             + fwd_extra_flops + bwd_extra_flops)
-    p2p = spec.spmd_p2p_bytes(cost.act_bytes) * (1.0 + bwd_p2p_mult)
+    if table is None:
+        table = build_tick_table(SimConfig(
+            n_stages=spec.n_stages, layers_per_stage=spec.layers_per_stage,
+            n_microbatches=spec.n_microbatches, schedule=spec.schedule,
+            n_chunks=getattr(spec, "n_chunks", 0) or 0))
+    T_ = table.n_ticks
+    k_c = table.layers_per_chunk
+    flops = T_ * (3.0 * k_c * cost.flops_fwd_layer + 3.0 * head_flops)
+    p2p = 3.0 * T_ * cost.act_bytes
     coll = p2p + extra_coll_bytes
     return {
         "dot_flops": flops,
         "p2p_bytes": p2p,
+        "n_ticks": T_,
         "compute_s": flops / cost.flops_rate,
         "collective_s": coll / cost.p2p_bw if cost.p2p_bw > 0 else 0.0,
     }

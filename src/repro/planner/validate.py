@@ -13,12 +13,13 @@ over a single ``apply_layer``), so the comparison checks the *scheduling*
 arithmetic — tick counts, permute counts, collective placement/frequency —
 rather than a hand-written flop formula.
 
-Backward multipliers, derived from how the repo lowers AD:
-  * pipeline (core/pipeline.py): per-tick remat => backward tick re-runs the
-    forward dots (recompute) and adds their transposes: flops_bwd = 3x fwd.
-    The recomputed forward ppermute is DCE'd (no cotangent consumes its
-    primal output), so backward adds exactly ONE transposed permute per
-    tick: p2p_bwd = 1x fwd (see simulator.predict_spmd_composition).
+Backward multipliers, derived from how the repo lowers the gradients:
+  * pipeline (core/pipeline.py): the generic tick-table executor runs ONE
+    masked chunk VJP per stage per tick (forward + transposed dots = 3x the
+    chunk's forward flops), one masked head VJP per tick (3x head flops,
+    stage-replicated), and exactly THREE ring permutes per tick (forward
+    activation, head cotangent, backward cotangent) — see
+    simulator.predict_spmd_composition, pinned by the conformance tests.
   * layered accumulation (core/accumulation.py): the backward is hand-written
     (vjp per layer restoring kept checkpoints): flops_bwd = 3x fwd, and per
     layer one fwd gather + one bwd gather + one psum_scatter over `data`.
@@ -131,15 +132,15 @@ def pipeline_composition(cfg: ModelConfig, spec: PipeSpec, mesh,
         layer_param_bytes=0.0, layer_grad_bytes=0.0,
         flops_rate=roofline.PEAK_FLOPS,
         p2p_bw=roofline.ICI_BW, coll_bw=roofline.ICI_BW)
-    # embed/head run stage-replicated: head fwd once per micro-batch, its
-    # gradient (2x) via AD — all per device.  Their fp32 gradients get one
-    # completing ring-psum over `stage` at the end of the step.
+    # embed/head run stage-replicated: the executor's masked head VJP runs
+    # EVERY tick (3x head flops, see predict_spmd_composition).  The outer
+    # leaves' fp32 gradients get one completing ring-psum over `stage` at
+    # the end of the step.
     S = spec.n_stages
     outer_psum = 2.0 * (S - 1) / S * tc.outer_bytes
     pred = simlib.predict_spmd_composition(
         spec, cost,
-        fwd_extra_flops=M * tc.flops_head,
-        bwd_extra_flops=2.0 * M * tc.flops_head,
+        head_flops=tc.flops_head,
         extra_coll_bytes=outer_psum)
     measured = {"compute_s": meas.compute_s(),
                 "collective_s": meas.collective_s(),

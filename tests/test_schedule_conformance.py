@@ -1,0 +1,303 @@
+"""Schedule-as-data conformance: the tick table IS the execution contract.
+
+For every executable schedule the generic tick-table executor's *lowered
+jaxpr* must issue exactly the collective counts the table predicts
+(``TickTable.predicted_collectives``): three stage ring-permutes per tick
+(forward activation, head cotangent, backward cotangent) and — with ZeRO
+chunk storage — one data-axis all_gather plus one psum_scatter per
+(layer leaf, chunk).  A drifting count means the executor and the planner's
+cost model have silently diverged, which is exactly the bug class the
+schedule-as-data refactor exists to prevent.
+
+Also here: 1f1b / interleaved multi-step trajectory parity against the
+non-pipelined layered trainer, tick-table JSON round-tripping through the
+plan document path, and launch.train's fail-fast schedule validation.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import roofline
+from repro.core.pipeline import (make_partitioned_pipeline_grad_fn,
+                                 make_pipeline_grad_fn,
+                                 partitioned_stage_param_specs,
+                                 stage_param_specs, to_partitioned_stage_stack,
+                                 to_stage_stack)
+from repro.core.schedules import PipeSpec
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig
+from repro.planner import simulator as simlib
+
+CFG = ModelConfig(name="conf", arch_type="dense", num_layers=4, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", param_dtype="float32")
+M = 4
+EXECUTABLE = ("modular", "1f1b", "interleaved")
+
+
+def _layer_template(cfg):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        ["layers"])
+
+
+def _measured_collectives(spec, *, partitioned):
+    """Roofline-walk the lowered executor; return the conformance counters."""
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
+    axis = AxisCtx(data="data", dp=2, ndata=2)
+    params = jax.eval_shape(lambda: T.init_params(CFG, jax.random.PRNGKey(0)))
+    tmpl = _layer_template(CFG)
+    batch = {k: jax.ShapeDtypeStruct((M, 2, 16), jnp.int32)
+             for k in ("tokens", "labels", "mask")}
+    bspecs = {k: P(None, "data", None) for k in batch}
+    if partitioned:
+        layers = jax.eval_shape(
+            lambda p: to_partitioned_stage_stack(p, spec, 2),
+            params["layers"])
+        specs = partitioned_stage_param_specs(CFG, 1)
+        grad_fn = make_partitioned_pipeline_grad_fn(CFG, axis, spec, tmpl)
+    else:
+        layers = jax.eval_shape(lambda p: to_stage_stack(p, spec),
+                                params["layers"])
+        specs = stage_param_specs(CFG, 1)
+        grad_fn = make_pipeline_grad_fn(CFG, axis, spec)
+    pparams = dict({k: v for k, v in params.items() if k != "layers"},
+                   layers=layers)
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+                          out_specs=(specs, {"loss": P(), "ntok": P()}))
+    c = roofline.analyze(fn, pparams, batch, mesh=mesh)
+    return {
+        "ppermute_stage": c.coll_counts.get(("stage", "ppermute"), 0.0),
+        "all_gather_data": sum(v for (ax, nm), v in c.coll_counts.items()
+                               if ax == "data" and "all_gather" in nm),
+        # lax.psum_scatter lowers as the `reduce_scatter` primitive
+        "psum_scatter_data": sum(v for (ax, nm), v in c.coll_counts.items()
+                                 if ax == "data"
+                                 and nm in ("psum_scatter", "reduce_scatter")),
+    }, len(jax.tree.leaves(tmpl))
+
+
+@pytest.mark.parametrize("sched", EXECUTABLE)
+def test_replicated_collectives_match_tick_table(sched):
+    spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                    schedule=sched)
+    table = spec.tick_table()
+    meas, _ = _measured_collectives(spec, partitioned=False)
+    pred = table.predicted_collectives(partitioned=False)
+    assert meas["ppermute_stage"] == pred["ppermute_stage"], (meas, pred)
+    # replicated layer storage must issue NO data-axis gathers/scatters
+    assert meas["all_gather_data"] == 0, meas
+    assert meas["psum_scatter_data"] == 0, meas
+
+
+@pytest.mark.parametrize("sched", EXECUTABLE)
+def test_partitioned_collectives_match_tick_table(sched):
+    spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                    schedule=sched)
+    table = spec.tick_table()
+    meas, n_leaves = _measured_collectives(spec, partitioned=True)
+    pred = table.predicted_collectives(partitioned=True,
+                                       n_layer_leaves=n_leaves)
+    assert meas == pytest.approx(pred), (sched, meas, pred)
+
+
+@pytest.mark.parametrize("sched", EXECUTABLE + ("gpipe",))
+@pytest.mark.parametrize("S,K,M", [(2, 2, 4), (4, 2, 8), (2, 4, 2)])
+def test_tick_table_covers_all_work(sched, S, K, M):
+    """Pure-table invariant: every (chunk, micro-batch) runs forward exactly
+    once and backward exactly once, forwards respect chunk order, and each
+    backward follows its own forward — for every executable schedule and a
+    spread of shapes."""
+    try:
+        spec = PipeSpec(n_stages=S, layers_per_stage=K, n_microbatches=M,
+                        schedule=sched)
+    except AssertionError:
+        pytest.skip(f"{sched} infeasible at S={S} K={K} M={M}")
+    table = spec.tick_table()
+    V, n_g = table.n_chunks, table.n_chunks * S
+    f_done, b_done = {}, {}
+    for t in range(table.n_ticks):
+        for s in range(S):
+            kind = table.kind[t][s]
+            if kind == simlib.TICK_IDLE:
+                continue
+            g = table.unit_v[t][s] * S + s          # global chunk = v*S + s
+            mb = table.unit_mb[t][s]
+            if kind == simlib.TICK_F:
+                assert (g, mb) not in f_done, (sched, g, mb)
+                if g > 0:                            # chunk order (causality)
+                    assert f_done[(g - 1, mb)] < t, (sched, g, mb)
+                f_done[(g, mb)] = t
+            else:
+                assert kind == simlib.TICK_B
+                assert (g, mb) not in b_done, (sched, g, mb)
+                assert f_done[(g, mb)] < t, (sched, g, mb)
+                if g < n_g - 1:
+                    assert b_done[(g + 1, mb)] < t, (sched, g, mb)
+                b_done[(g, mb)] = t
+    assert len(f_done) == n_g * M, (sched, len(f_done))
+    assert len(b_done) == n_g * M, (sched, len(b_done))
+    assert V * table.layers_per_chunk == K           # chunks tile the stage
+
+
+def test_tick_table_json_roundtrip():
+    for sched in EXECUTABLE:
+        spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                        schedule=sched)
+        table = spec.tick_table()
+        doc = json.loads(json.dumps(table.to_json()))   # through real JSON
+        back = simlib.TickTable.from_json(doc)
+        assert back.schedule == table.schedule
+        assert back.n_ticks == table.n_ticks
+        assert back.kind == table.kind
+        assert back.unit_v == table.unit_v
+        assert back.unit_mb == table.unit_mb
+        assert back.predicted_collectives(partitioned=True) == \
+            table.predicted_collectives(partitioned=True)
+
+
+@pytest.mark.parametrize("sched", ["1f1b", "interleaved"])
+def test_pipelined_trajectory_matches_nonpipelined(sched):
+    """Tentpole acceptance: the 1f1b / interleaved executors follow the SAME
+    optimization trajectory (loss + grad norm, >= 4 steps) as the
+    non-pipelined layered/partitioned trainer — the tick ordering changes,
+    the math must not."""
+    import math
+
+    from repro.core import stepfn
+    from repro.core.accumulation import AccumConfig
+    from repro.optim.adam import AdamConfig, adam_init
+
+    spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                    schedule=sched)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (M, 2, 16), 0,
+                              CFG.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1),
+             "mask": jnp.ones_like(toks)}
+    opt_cfg = AdamConfig(lr=1e-3)
+    steps = 4
+
+    # reference: non-pipelined layered accumulation, ZeRO-partitioned,
+    # same data parallelism (data=2), same init key, same batch every step
+    ref_mesh = compat.make_mesh((2, 1), ("data", "model"))
+    acc = AccumConfig(method="layered", partitioned=True, n_microbatches=M)
+    ref_step = stepfn.build_train_step(CFG, ref_mesh, acc, opt_cfg,
+                                       donate=False)
+    ref_storage = stepfn.init_storage(CFG, ref_mesh, jax.random.PRNGKey(0),
+                                      partitioned=True)
+    ref_opt = adam_init(ref_storage, moment_dtype=opt_cfg.moment_dtype)
+    ref_losses, ref_gnorms = [], []
+    for _ in range(steps):
+        ref_storage, ref_opt, m = ref_step(ref_storage, ref_opt, batch)
+        ref_losses.append(float(m["loss"]))
+        ref_gnorms.append(float(m["grad_norm"]))
+
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
+    step = stepfn.build_pipeline_train_step(
+        CFG, mesh, spec, opt_cfg, partitioned=True, donate=False)
+    storage = stepfn.init_pipeline_storage(
+        CFG, mesh, jax.random.PRNGKey(0), spec, partitioned=True)
+    opt = adam_init(storage, moment_dtype=opt_cfg.moment_dtype)
+    losses, gnorms = [], []
+    for _ in range(steps):
+        storage, opt, m = step(storage, opt, batch)
+        losses.append(float(m["loss"]))
+        gnorms.append(float(m["grad_norm"]))
+
+    assert all(math.isfinite(l) for l in losses), losses
+    np.testing.assert_allclose(losses, ref_losses, rtol=2e-4)
+    np.testing.assert_allclose(gnorms, ref_gnorms, rtol=1e-3)
+    assert losses[-1] < losses[0]         # it actually optimizes
+
+
+@pytest.mark.parametrize("sched", ["1f1b", "interleaved"])
+def test_plan_with_schedule_executes_through_train(tmp_path, sched):
+    """Acceptance e2e: a pipelined plan naming 1f1b / interleaved (execution
+    section + embedded tick table, exactly what launch.plan emits for a
+    winner of that schedule) runs through ``launch.train --plan`` and lands
+    on the same loss trajectory as the non-pipelined layered/partitioned
+    trainer (gemma-2b smoke is fp32)."""
+    from repro.launch import train as train_cli
+
+    common = ["--global-batch", "4", "--seq-len", "32", "--steps", "4"]
+    ref = train_cli.main(["--arch", "gemma-2b", "--smoke", "--mesh", "2x1",
+                          "--method", "layered", "--microbatches", "2",
+                          *common])
+
+    table = PipeSpec(n_stages=2, layers_per_stage=1, n_microbatches=2,
+                     schedule=sched).tick_table()
+    plan = {
+        "version": 1,
+        "kind": "execution",
+        "execution": {
+            "arch": "gemma-2b", "smoke": True, "mesh": "2x1",
+            "method": "layered", "partitioned": True, "microbatches": 2,
+            "global_batch": 4, "seq_len": 32, "steps": 4,
+            "stages": 2, "schedule": sched, "tick_table": table.to_json(),
+        },
+    }
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan))
+    got = train_cli.main(["--plan", str(p)])
+    np.testing.assert_allclose(got["first_loss"], ref["first_loss"],
+                               rtol=2e-4)
+    np.testing.assert_allclose(got["last_loss"], ref["last_loss"], rtol=2e-4)
+    assert got["last_loss"] < got["first_loss"]
+
+
+def test_train_rejects_unknown_schedule(tmp_path, capsys):
+    """Fail-fast bugfix: a plan (or flag) naming a schedule the executor
+    cannot interpret must die with a legible error listing the executable
+    set — not crash deep inside tracing."""
+    from repro.launch import train as train_cli
+
+    plan = {
+        "version": 1,
+        "kind": "execution",
+        "execution": {
+            "arch": "gemma-2b", "smoke": True, "mesh": "2x1",
+            "method": "layered", "partitioned": True, "microbatches": 2,
+            "global_batch": 4, "seq_len": 16, "steps": 1,
+            "stages": 2, "schedule": "zigzag",
+        },
+    }
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan))
+    with pytest.raises(SystemExit):
+        train_cli.main(["--plan", str(p)])
+    err = capsys.readouterr().err
+    assert "zigzag" in err
+    for sched in EXECUTABLE:
+        assert sched in err, err
+
+
+def test_train_rejects_mismatched_plan_table(tmp_path, capsys):
+    """A plan whose embedded tick table disagrees with the resolved execution
+    shape must fail fast, not silently run a different schedule."""
+    from repro.launch import train as train_cli
+
+    table = PipeSpec(n_stages=2, layers_per_stage=1, n_microbatches=4,
+                     schedule="1f1b").tick_table()
+    plan = {
+        "version": 1,
+        "kind": "execution",
+        "execution": {
+            "arch": "gemma-2b", "smoke": True, "mesh": "2x1",
+            "method": "layered", "partitioned": True, "microbatches": 2,
+            "global_batch": 4, "seq_len": 16, "steps": 1,
+            "stages": 2, "schedule": "modular",
+            "tick_table": table.to_json(),
+        },
+    }
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan))
+    with pytest.raises(SystemExit):
+        train_cli.main(["--plan", str(p)])
+    err = capsys.readouterr().err
+    assert "does not match" in err, err

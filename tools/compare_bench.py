@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
+
+``benchmarks/run.py --smoke --only <suite>`` writes
+``benchmarks/out/BENCH_<suite>.json``; the committed reference values live in
+``benchmarks/baselines/``.  For each baselined suite this script compares the
+``derived`` metrics:
+
+  * KEY metrics (per-suite list below, each with a better-direction): a
+    relative regression beyond ``--threshold`` (default 25%) FAILS the run.
+    These are chosen to be machine-stable (mostly same-run ratios, plus the
+    planner's model-agreement error), so the gate works on shared CI runners.
+  * every other shared numeric metric: drift beyond the threshold only WARNS
+    (absolute CPU wall-clock is expected to move between runners).
+
+Booleans are exact: a key boolean flipping from its baseline fails.
+
+Usage:  python tools/compare_bench.py \\
+            [--baseline benchmarks/baselines] [--fresh benchmarks/out] \\
+            [--threshold 0.25]
+
+Refreshing baselines after an intentional perf change:
+  PYTHONPATH=src:. python benchmarks/run.py --smoke --only <suite>
+  cp benchmarks/out/BENCH_<suite>.json benchmarks/baselines/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# metric -> "higher" | "lower" (which direction is better) | "exact"
+KEY_METRICS: dict[str, dict[str, str]] = {
+    "BENCH_planner": {
+        # simulator-vs-roofline split agreement: the planner's core claim
+        "max_split_error": "lower",
+        "winner_is_paper_optimum": "exact",
+    },
+    "BENCH_kernels": {
+        # fused ZeRO AdamW chunk update vs per-leaf tree_map baseline
+        "fused_adamw_speedup": "higher",
+    },
+    "BENCH_serving": {
+        # continuous-batching throughput win over static batching
+        "continuous_speedup": "higher",
+        "continuous_tok_s": "higher",
+    },
+    "BENCH_pipeline": {
+        # ZeRO-partitioned step time relative to replicated (same-run ratio)
+        "partitioned_over_replicated_step": "lower",
+    },
+}
+
+
+def compare_suite(name: str, base: dict, fresh: dict,
+                  threshold: float) -> tuple[list[str], list[str]]:
+    fails, warns = [], []
+    keys = KEY_METRICS.get(name, {})
+    bd, fd = base.get("derived", {}), fresh.get("derived", {})
+    for metric, bval in sorted(bd.items()):
+        if metric not in fd:
+            fails.append(f"{name}: derived metric {metric!r} disappeared")
+            continue
+        fval = fd[metric]
+        direction = keys.get(metric)
+        if isinstance(bval, bool) or isinstance(fval, bool):
+            if bool(bval) != bool(fval):
+                msg = f"{name}: {metric} flipped {bval} -> {fval}"
+                (fails if direction == "exact" else warns).append(msg)
+            continue
+        if not isinstance(bval, (int, float)) \
+                or not isinstance(fval, (int, float)):
+            continue
+        if bval == 0:
+            continue
+        rel = (fval - bval) / abs(bval)
+        moved = f"{name}: {metric} {bval} -> {fval} ({rel:+.1%})"
+        if direction == "higher" and rel < -threshold:
+            fails.append(moved + f"  [key metric regressed > {threshold:.0%}]")
+        elif direction == "lower" and rel > threshold:
+            fails.append(moved + f"  [key metric regressed > {threshold:.0%}]")
+        elif abs(rel) > threshold:
+            warns.append(moved)
+    return fails, warns
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(root / "benchmarks/baselines"))
+    ap.add_argument("--fresh", default=str(root / "benchmarks/out"))
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression that fails a key metric")
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+    baselines = sorted(base_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {base_dir} — nothing to compare")
+        return 1
+
+    all_fails, all_warns = [], []
+    for bpath in baselines:
+        fpath = fresh_dir / bpath.name
+        if not fpath.exists():
+            all_fails.append(f"{bpath.stem}: fresh result missing "
+                             f"({fpath}) — did the suite crash?")
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        fails, warns = compare_suite(bpath.stem, base, fresh, args.threshold)
+        all_fails.extend(fails)
+        all_warns.extend(warns)
+
+    for w in all_warns:
+        print(f"WARN  {w}")
+    for e in all_fails:
+        print(f"FAIL  {e}")
+    n = len(baselines)
+    if all_fails:
+        print(f"\nbench comparison: {len(all_fails)} failure(s) across "
+              f"{n} suite(s)")
+        return 1
+    print(f"bench comparison: {n} suite(s) within {args.threshold:.0%} "
+          f"of baselines ({len(all_warns)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
