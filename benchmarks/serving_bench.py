@@ -88,6 +88,7 @@ def bench_serving():
     pcfg = PagedCacheConfig(num_blocks=40, block_size=8, max_blocks_per_seq=5)
     fn_cache: dict = {}
     tok_s = {}
+    lat_sum = {}
     for mode in ("continuous", "static"):
         scfg = SchedulerConfig(cache=pcfg, max_batch=4, mode=mode)
         dts = []
@@ -100,6 +101,7 @@ def bench_serving():
                 dts.append(time.perf_counter() - t0)
         lat = [r.finish_step - r.arrival for r in eng.finished.values()]
         tok_s[mode] = eng.stats["emitted_tokens"] / min(dts)
+        lat_sum[mode] = eng.latency_summary()   # last (warmed) run
         rows.append({"bench": f"engine_{mode}",
                      "tok_s": round(tok_s[mode], 1),
                      "emitted_tokens": eng.stats["emitted_tokens"],
@@ -109,11 +111,21 @@ def bench_serving():
                          eng.stats["emitted_tokens"]
                          / eng.stats["engine_steps"], 2),
                      "mean_latency_steps": round(float(np.mean(lat)), 2),
+                     "ttft_ms": lat_sum[mode]["ttft_ms"],
+                     "itl_ms": lat_sum[mode]["itl_ms"],
                      "preemptions": eng.stats["preemptions"]})
 
+    cont = lat_sum["continuous"]
     return rows, {
         "continuous_tok_s": round(tok_s["continuous"], 1),
         "static_tok_s": round(tok_s["static"], 1),
         "continuous_speedup": round(tok_s["continuous"] / tok_s["static"], 3),
         "paged_vs_dense_step_ratio": round(paged_us / dense_us, 3),
+        # wall-clock latency percentiles of the warmed continuous run
+        # (engine.latency_summary): warn-only in compare_bench until a
+        # baseline containing them is committed
+        "serving_ttft_p50_ms": round(cont["ttft_ms"].get("p50", 0.0), 2),
+        "serving_ttft_p99_ms": round(cont["ttft_ms"].get("p99", 0.0), 2),
+        "serving_itl_p50_ms": round(cont["itl_ms"].get("p50", 0.0), 2),
+        "serving_itl_p99_ms": round(cont["itl_ms"].get("p99", 0.0), 2),
     }

@@ -210,11 +210,11 @@ def from_partitioned_stage_stack(chunks: PyTree, spec: PipeSpec,
 # ---------------------------------------------------------------------------
 # The generic tick-table executor
 # ---------------------------------------------------------------------------
-def _table_rows(table) -> dict:
-    """The tick table as [T, S] device arrays the scan body indexes by
-    (tick, axis_index)."""
+def _table_rows_np(table) -> dict:
+    """The tick table as [T, S] numpy arrays (host side: the segmented
+    profiler slices per-tick rows from these)."""
     def arr(rows, dt=np.int32):
-        return jnp.asarray(np.asarray(rows, dtype=dt))
+        return np.asarray(rows, dtype=dt)
     return {
         "kind": arr(table.kind),
         "v": arr(table.unit_v),
@@ -231,18 +231,59 @@ def _table_rows(table) -> dict:
     }
 
 
+def _table_rows(table) -> dict:
+    """The tick table as [T, S] device arrays the scan body indexes by
+    (tick, axis_index)."""
+    return {k: jnp.asarray(v) for k, v in _table_rows_np(table).items()}
+
+
+@dataclasses.dataclass
+class PipelineExecutor:
+    """The tick-table executor, split into reusable pieces.
+
+    ``grad_fn`` composes them into the one-dispatch scan executor (the
+    training hot path).  The pieces are also callable individually — the
+    opt-in *segmented-execution* mode (stepfn.build_pipeline_tick_profiler)
+    runs ``make_tick`` one tick per dispatch so the host can time every tick
+    of the schedule, with ``pack_state``/``unpack_state`` carrying the
+    executor state across the per-tick jit boundary.
+
+    All pieces run INSIDE shard_map over a mesh containing `stage`
+    (+ optionally `data`/`model`/`pod`), on the same storage layouts as
+    ``grad_fn``.
+    """
+    grad_fn: Any          # (params, batch) -> (grads, metrics)
+    outer_ctx: Any        # params -> (outer_g, shared_g)
+    data_ctx: Any         # (outer_g, batch) -> (X0, pos, n_tok, inv_n)
+    init_carry: Any       # (outer_g, shared_g, X0, params) -> carry
+    wbuf_init: Any        # params -> wbuf (zeros when partitioned)
+    gather_chunk: Any     # (params, v2) -> gathered chunk weights
+    update_wbuf: Any      # (wbuf, w_v, v2) -> wbuf
+    make_tick: Any        # (ctx, wbuf) -> tick(carry, xs)
+    epilogue: Any         # (ctx, carry, params) -> (grads, metrics)
+    pack_state: Any       # (wbuf, carry, pos, inv_n, n_tok) -> state dict
+    unpack_state: Any     # state dict -> (wbuf, carry, pos, inv_n, n_tok)
+    table: Any
+    segments: list
+    rows: dict            # [T, S] device arrays
+    rows_np: dict         # [T, S] numpy arrays
+    partitioned: bool
+    outer_tmpl: PyTree    # outer param ShapeDtypeStructs (state spec aid)
+
+
 def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
                        layer_template: PyTree | None, *,
                        partitioned: bool, stage_axis: str = "stage",
-                       table=None):
-    """grad_fn(params, batch) -> (grads, metrics) interpreting ``table``.
+                       table=None) -> PipelineExecutor:
+    """Build the executor pieces interpreting ``table`` (and the composed
+    ``grad_fn(params, batch) -> (grads, metrics)``).
 
-    Call INSIDE shard_map over a mesh containing `stage` (+ optionally
-    `data`/`model`/`pod`).  Replicated storage: params["layers"] leaves are
-    the stage-local ``[1(stage), K, ...]`` stacks.  Partitioned storage:
-    ``[1, K, 1(model), 1(data), chunk]`` fp32 ZeRO chunks, with
-    ``layer_template`` holding the global per-layer shapes.  Batch leaves
-    are [M, mb_local, ...] (replicated over `stage`).
+    Call the pieces INSIDE shard_map over a mesh containing `stage`
+    (+ optionally `data`/`model`/`pod`).  Replicated storage:
+    params["layers"] leaves are the stage-local ``[1(stage), K, ...]``
+    stacks.  Partitioned storage: ``[1, K, 1(model), 1(data), chunk]`` fp32
+    ZeRO chunks, with ``layer_template`` holding the global per-layer
+    shapes.  Batch leaves are [M, mb_local, ...] (replicated over `stage`).
     """
     from repro.core import partition as zp
     from repro.core.accumulation import (_complete_block_replicated_grads,
@@ -276,6 +317,9 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
         layer_tmpl = layer_template
     else:
         layer_tmpl = None
+    full_tmpl = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    outer_tmpl = {k: v for k, v in full_tmpl.items() if k != "layers"}
 
     def mark_chunk(w_c):
         """Pre-vma: tp_entry_mark the in-block model-replicated chunk leaves
@@ -301,51 +345,66 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
             return zp.pvary_missing(jnp.zeros(leaf.shape, jnp.float32), axes)
         return jax.tree.map(z, tree, specs)
 
-    def grad_fn(params, batch):
-        s = lax.axis_index(stage_axis)
-        on_stage0 = (s == 0)
+    def outer_ctx(params):
+        """Outer leaves in compute dtype; marked varying over
+        stage/data/pod so the per-tick VJPs yield LOCAL partials — the
+        single explicit psum in the epilogue is the only reduction."""
         outer_store = {k: v for k, v in params.items() if k != "layers"}
-        # outer leaves run stage-replicated in compute dtype; mark them
-        # varying over stage/data/pod so the per-tick VJPs yield LOCAL
-        # partials — the single explicit psum below is the only reduction
         outer_g = {k: jax.tree.map(
             lambda x: pvary_missing(x.astype(dtype), vary_axes), v)
             for k, v in outer_store.items()}
-        shared_g = outer_g.get("shared", {})
+        return outer_g, outer_g.get("shared", {})
 
-        # ---- layer weights: one [K, ...] compute-dtype buffer ------------
+    # ---- layer weights: one [K, ...] compute-dtype buffer ----------------
+    def wbuf_zeros():
+        def z(path, tmpl, sp):
+            lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
+            return pvary_missing(
+                jnp.zeros((spec.layers_per_stage, *lshape), dtype),
+                vary_axes)
+        return jax.tree_util.tree_map_with_path(z, layer_tmpl, lspecs)
+
+    def wbuf_init(params):
+        """The per-pass weight buffer: zeros when partitioned (filled by
+        ``gather_chunk``/``update_wbuf`` at the table's gather boundaries),
+        the stage-local [K, ...] stack otherwise (data/pod-varying for
+        local partials)."""
         if partitioned:
-            def wbuf_zeros():
-                def z(path, tmpl, sp):
-                    lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
-                    return pvary_missing(
-                        jnp.zeros((spec.layers_per_stage, *lshape), dtype),
-                        vary_axes)
-                return jax.tree_util.tree_map_with_path(z, layer_tmpl, lspecs)
+            return wbuf_zeros()
+        return jax.tree.map(
+            lambda p: pvary_missing(p[0].astype(dtype), dp_axes),
+            params["layers"])
 
-            def gather_chunk(v2):
-                """all_gather local chunk v2's weights over `data`: leaves
-                [k_c, 1, 1, chunk] -> [k_c, *model-local shape] bf16.  One
-                all_gather per leaf per chunk per pass — V per leaf total
-                (modular: V=K, the layered-accumulation frequency)."""
-                sl = jax.tree.map(
-                    lambda p: p[0, v2 * k_c:(v2 + 1) * k_c],
-                    params["layers"])
-
-                def g(path, tmpl, sp, c):
-                    lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
-                    full = zp.gather_local(c, axis.data, (k_c, *lshape),
-                                           dtype, stacked=True)
-                    return pvary_missing(full, dp_axes)
-                return jax.tree_util.tree_map_with_path(g, layer_tmpl,
-                                                        lspecs, sl)
+    def gather_chunk(params, v2):
+        """all_gather local chunk v2's weights over `data`: leaves
+        [k_c, 1, 1, chunk] -> [k_c, *model-local shape] bf16.  One
+        all_gather per leaf per chunk per pass — V per leaf total
+        (modular: V=K, the layered-accumulation frequency).  ``v2`` may be
+        a python int (scan executor: static slice) or a traced scalar
+        (segmented mode: one compile serves every chunk)."""
+        if isinstance(v2, (int, np.integer)):
+            sl = jax.tree.map(
+                lambda p: p[0, v2 * k_c:(v2 + 1) * k_c], params["layers"])
         else:
-            # stage-local [K, ...] stacks, data/pod-varying for local partials
-            wbuf0 = jax.tree.map(
-                lambda p: pvary_missing(p[0].astype(dtype), dp_axes),
+            sl = jax.tree.map(
+                lambda p: lax.dynamic_slice_in_dim(p[0], v2 * k_c, k_c, 0),
                 params["layers"])
 
-        # ---- embed (stage-replicated compute; only stage 0's enters) -----
+        def g(path, tmpl, sp, c):
+            lshape = zp.local_shape(tmpl.shape, sp, axis.tp, path=path)
+            full = zp.gather_local(c, axis.data, (k_c, *lshape),
+                                   dtype, stacked=True)
+            return pvary_missing(full, dp_axes)
+        return jax.tree_util.tree_map_with_path(g, layer_tmpl, lspecs, sl)
+
+    def update_wbuf(wbuf, w_v, v2):
+        return jax.tree.map(
+            lambda W, wv: lax.dynamic_update_slice_in_dim(W, wv, v2 * k_c, 0),
+            wbuf, w_v)
+
+    def data_ctx(outer_g, batch):
+        """Embed the batch (stage-replicated compute; only stage 0's output
+        enters the pipeline) and count loss tokens."""
         def embed_one(_, mb):
             return None, T.embed_inputs(cfg, outer_g, mb, axis)
 
@@ -357,9 +416,11 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
             n_tok = lax.psum(n_tok, axis.data)
         if axis.pod:
             n_tok = lax.psum(n_tok, axis.pod)
-        inv_n = 1.0 / n_tok
+        return X0, pos, n_tok, 1.0 / n_tok
 
-        # ---- activation / cotangent buffers ------------------------------
+    def init_carry(outer_g, shared_g, X0, wbuf):
+        """Activation/cotangent buffers + zero gradient accumulators."""
+        on_stage0 = lax.axis_index(stage_axis) == 0
         zeros_act = pvary_missing(jnp.zeros((V, M, *X0.shape[1:]), dtype),
                                   vary_axes)
         # stage 0's local chunk 0 is global chunk 0: seed its inputs with the
@@ -369,17 +430,21 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
         cot = zeros_act
         dX0 = pvary_missing(jnp.zeros(X0.shape, dtype), vary_axes)
 
-        # ---- gradient accumulators ---------------------------------------
-        stacked_tmpl = (wbuf_zeros() if partitioned else wbuf0)
-        dW = grad_zeros(stacked_tmpl, lspecs)
+        dW = grad_zeros(wbuf, lspecs)
         dsh = grad_zeros(shared_g, outer_specs.get("shared", {}))
         dfn = grad_zeros(outer_g["final_norm"], outer_specs["final_norm"])
         demb = grad_zeros(outer_g["embed"], outer_specs["embed"])
         dhead = (None if tied
                  else grad_zeros(outer_g["head"], outer_specs["head"]))
         nll_sum = pvary_missing(jnp.zeros((), jnp.float32), vary_axes)
+        return (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum)
 
-        # ---- the tick body ------------------------------------------------
+    # ---- the tick body ----------------------------------------------------
+    def make_tick(ctx, wbuf):
+        outer_g, shared_g = ctx["outer_g"], ctx["shared_g"]
+        batch, pos, inv_n = ctx["batch"], ctx["pos"], ctx["inv_n"]
+        s = lax.axis_index(stage_axis)
+
         def head_vjp(xh, hbatch):
             """Masked head VJP at the loss stage: loss value + cotangent."""
             def f(fn_p, head_p, embed_p, x):
@@ -405,110 +470,101 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
                     zp.match_vma(jnp.ones((), loss.dtype), loss))
             return nll, dfn_t, dhead_t, demb_t, dxh
 
-        def make_tick(wbuf):
-            def tick(carry, xs):
-                (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
-                kind = xs["kind"][s]
-                v, mb = xs["v"][s], xs["mb"][s]
-                is_b = kind == simlib.TICK_B
-                g = v * S + s                       # traced global chunk
-                x = act_in[v, mb]
-                dy = cot[v, mb]
+        def tick(carry, xs):
+            (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+            kind = xs["kind"][s]
+            v, mb = xs["v"][s], xs["mb"][s]
+            is_b = kind == simlib.TICK_B
+            g = v * S + s                       # traced global chunk
+            x = act_in[v, mb]
+            dy = cot[v, mb]
 
-                # one masked chunk VJP: the vjp forward IS the F unit's
-                # compute, the pull the B unit's (recompute + transposes)
-                w_chunk = jax.tree.map(
-                    lambda p: lax.dynamic_slice_in_dim(p, v * k_c, k_c, 0),
-                    wbuf)
+            # one masked chunk VJP: the vjp forward IS the F unit's
+            # compute, the pull the B unit's (recompute + transposes)
+            w_chunk = jax.tree.map(
+                lambda p: lax.dynamic_slice_in_dim(p, v * k_c, k_c, 0),
+                wbuf)
 
-                def chunk_f(w_c, sh, xc):
-                    w_c = mark_chunk(w_c)
+            def chunk_f(w_c, sh, xc):
+                w_c = mark_chunk(w_c)
 
-                    def layer_step(xc, j):
-                        lp = jax.tree.map(lambda p: p[j], w_c)
-                        lid = g * k_c + j
-                        x2, _aux = T.apply_layer(
-                            cfg, lp, sh, xc, positions=pos,
-                            window=windows[lid], shared_flag=flags[lid],
-                            axis=axis)
-                        return x2, None
-                    y, _ = compat.scan(layer_step, xc, jnp.arange(k_c))
-                    return y
+                def layer_step(xc, j):
+                    lp = jax.tree.map(lambda p: p[j], w_c)
+                    lid = g * k_c + j
+                    x2, _aux = T.apply_layer(
+                        cfg, lp, sh, xc, positions=pos,
+                        window=windows[lid], shared_flag=flags[lid],
+                        axis=axis)
+                    return x2, None
+                y, _ = compat.scan(layer_step, xc, jnp.arange(k_c))
+                return y
 
-                y, pull = jax.vjp(chunk_f, w_chunk, shared_g, x)
-                dw_v, dsh_t, dx = pull(zp.match_vma(dy, y))
+            y, pull = jax.vjp(chunk_f, w_chunk, shared_g, x)
+            dw_v, dsh_t, dx = pull(zp.match_vma(dy, y))
 
-                # accumulate the B unit's chunk gradient at rows [v*k_c, ...)
-                def acc_dw(Wl, wv):
-                    cur = lax.dynamic_slice_in_dim(Wl, v * k_c, k_c, 0)
-                    upd = cur + jnp.where(is_b, wv.astype(jnp.float32), 0.0)
-                    return lax.dynamic_update_slice_in_dim(Wl, upd,
-                                                           v * k_c, 0)
-                dW = jax.tree.map(acc_dw, dW, dw_v)
-                dsh = jax.tree.map(
-                    lambda a, b: a + jnp.where(is_b, b.astype(jnp.float32),
-                                               0.0), dsh, dsh_t)
-                # backward of global chunk 0 ends the chain: its dx is the
-                # embedding cotangent (only ever unmasked on stage 0)
-                dX0 = dX0.at[mb].set(
-                    jnp.where(is_b & (g == 0), dx.astype(dtype), dX0[mb]))
+            # accumulate the B unit's chunk gradient at rows [v*k_c, ...)
+            def acc_dw(Wl, wv):
+                cur = lax.dynamic_slice_in_dim(Wl, v * k_c, k_c, 0)
+                upd = cur + jnp.where(is_b, wv.astype(jnp.float32), 0.0)
+                return lax.dynamic_update_slice_in_dim(Wl, upd,
+                                                       v * k_c, 0)
+            dW = jax.tree.map(acc_dw, dW, dw_v)
+            dsh = jax.tree.map(
+                lambda a, b: a + jnp.where(is_b, b.astype(jnp.float32),
+                                           0.0), dsh, dsh_t)
+            # backward of global chunk 0 ends the chain: its dx is the
+            # embedding cotangent (only ever unmasked on stage 0)
+            dX0 = dX0.at[mb].set(
+                jnp.where(is_b & (g == 0), dx.astype(dtype), dX0[mb]))
 
-                # ---- ring 1: forward activation --------------------------
-                recv = lax.ppermute(y.astype(dtype), stage_axis, fwd_perm)
-                fr_valid, fr_fin = xs["fr_valid"][s], xs["fr_fin"][s]
-                fr_v, fr_mb = xs["fr_v"][s], xs["fr_mb"][s]
-                act_in = act_in.at[fr_v, fr_mb].set(
-                    jnp.where(fr_valid & ~fr_fin, recv, act_in[fr_v, fr_mb]))
+            # ---- ring 1: forward activation --------------------------
+            recv = lax.ppermute(y.astype(dtype), stage_axis, fwd_perm)
+            fr_valid, fr_fin = xs["fr_valid"][s], xs["fr_fin"][s]
+            fr_v, fr_mb = xs["fr_v"][s], xs["fr_mb"][s]
+            act_in = act_in.at[fr_v, fr_mb].set(
+                jnp.where(fr_valid & ~fr_fin, recv, act_in[fr_v, fr_mb]))
 
-                # ---- head VJP on the (masked) final arrival --------------
-                hbatch = jax.tree.map(lambda b: b[fr_mb], batch)
-                nll, dfn_t, dhead_t, demb_t, dxh = head_vjp(recv, hbatch)
-                fin = fr_valid & fr_fin
-                nll_sum = nll_sum + jnp.where(fin, nll, 0.0)
+            # ---- head VJP on the (masked) final arrival --------------
+            hbatch = jax.tree.map(lambda b: b[fr_mb], batch)
+            nll, dfn_t, dhead_t, demb_t, dxh = head_vjp(recv, hbatch)
+            fin = fr_valid & fr_fin
+            nll_sum = nll_sum + jnp.where(fin, nll, 0.0)
 
-                def macc(acc, gt):
-                    return jax.tree.map(
-                        lambda a, b: a + jnp.where(fin,
-                                                   b.astype(jnp.float32),
-                                                   0.0), acc, gt)
-                dfn = macc(dfn, dfn_t)
-                demb = macc(demb, demb_t)
-                if dhead is not None:
-                    dhead_new = macc(dhead, dhead_t)
-                else:
-                    dhead_new = None
+            def macc(acc, gt):
+                return jax.tree.map(
+                    lambda a, b: a + jnp.where(fin,
+                                               b.astype(jnp.float32),
+                                               0.0), acc, gt)
+            dfn = macc(dfn, dfn_t)
+            demb = macc(demb, demb_t)
+            if dhead is not None:
+                dhead_new = macc(dhead, dhead_t)
+            else:
+                dhead_new = None
 
-                # ---- ring 2: head cotangent to stage S-1 (loss ring) -----
-                recv_h = lax.ppermute(dxh.astype(dtype), stage_axis, rev_perm)
-                hr_valid, hr_mb = xs["hr_valid"][s], xs["hr_mb"][s]
-                cot = cot.at[V - 1, hr_mb].set(
-                    jnp.where(hr_valid, recv_h, cot[V - 1, hr_mb]))
+            # ---- ring 2: head cotangent to stage S-1 (loss ring) -----
+            recv_h = lax.ppermute(dxh.astype(dtype), stage_axis, rev_perm)
+            hr_valid, hr_mb = xs["hr_valid"][s], xs["hr_mb"][s]
+            cot = cot.at[V - 1, hr_mb].set(
+                jnp.where(hr_valid, recv_h, cot[V - 1, hr_mb]))
 
-                # ---- ring 3: backward cotangent --------------------------
-                recv_b = lax.ppermute(dx.astype(dtype), stage_axis, rev_perm)
-                br_valid = xs["br_valid"][s]
-                br_v, br_mb = xs["br_v"][s], xs["br_mb"][s]
-                cot = cot.at[br_v, br_mb].set(
-                    jnp.where(br_valid, recv_b, cot[br_v, br_mb]))
+            # ---- ring 3: backward cotangent --------------------------
+            recv_b = lax.ppermute(dx.astype(dtype), stage_axis, rev_perm)
+            br_valid = xs["br_valid"][s]
+            br_v, br_mb = xs["br_v"][s], xs["br_mb"][s]
+            cot = cot.at[br_v, br_mb].set(
+                jnp.where(br_valid, recv_b, cot[br_v, br_mb]))
 
-                return (act_in, cot, dX0, dW, dsh, dfn, dhead_new, demb,
-                        nll_sum), None
-            return tick
+            return (act_in, cot, dX0, dW, dsh, dfn, dhead_new, demb,
+                    nll_sum), None
+        return tick
 
-        # ---- run the tick segments (gather boundaries are static) --------
-        carry = (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum)
-        wbuf = wbuf_zeros() if partitioned else wbuf0
-        for (t0, t1, chunks) in segments:
-            if partitioned:
-                for v2 in chunks:
-                    w_v = gather_chunk(v2)
-                    wbuf = jax.tree.map(
-                        lambda W, wv, a=v2 * k_c:
-                            lax.dynamic_update_slice_in_dim(W, wv, a, 0),
-                        wbuf, w_v)
-            if t1 > t0:
-                xs = {k: r[t0:t1] for k, r in ROWS.items()}
-                carry, _ = compat.scan(make_tick(wbuf), carry, xs)
+    def epilogue(ctx, carry, params):
+        """Embed backward + the single reduction pass (the pass tail, shared
+        by the scan executor and the segmented profiler)."""
+        outer_g, batch, n_tok = ctx["outer_g"], ctx["batch"], ctx["n_tok"]
+        outer_store = {k: v for k, v in params.items() if k != "layers"}
+        on_stage0 = lax.axis_index(stage_axis) == 0
         (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
 
         # ---- embed backward (accumulation.py pattern; dX0 is zero off
@@ -586,7 +642,65 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
             nll = lax.psum(nll, axis.pod)
         return grads, {"loss": nll / n_tok, "ntok": n_tok}
 
-    return grad_fn
+    # ---- segmented-mode state packing -------------------------------------
+    # The per-tick jit boundary only carries arrays; rank-0 leaves are lifted
+    # to [1] so every state leaf has a dim 0 the profiler's stage/data merge
+    # spec can attach to.
+    def _lift(tree, tmpl):
+        return jax.tree.map(lambda x, t: x[None] if t.ndim == 0 else x,
+                            tree, tmpl)
+
+    def _unlift(tree, tmpl):
+        return jax.tree.map(lambda x, t: x[0] if t.ndim == 0 else x,
+                            tree, tmpl)
+
+    def pack_state(wbuf, carry, pos, inv_n, n_tok):
+        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+        st = {"wbuf": wbuf, "act": act_in, "cot": cot, "dX0": dX0, "dW": dW,
+              "dsh": _lift(dsh, outer_tmpl.get("shared", {})),
+              "dfn": _lift(dfn, outer_tmpl["final_norm"]),
+              "demb": _lift(demb, outer_tmpl["embed"]),
+              "nll": nll_sum[None], "pos": pos, "inv_n": inv_n[None],
+              "n_tok": n_tok[None]}
+        if dhead is not None:
+            st["dhead"] = _lift(dhead, outer_tmpl["head"])
+        return st
+
+    def unpack_state(st):
+        dhead = (_unlift(st["dhead"], outer_tmpl["head"])
+                 if "dhead" in st else None)
+        carry = (st["act"], st["cot"], st["dX0"], st["dW"],
+                 _unlift(st["dsh"], outer_tmpl.get("shared", {})),
+                 _unlift(st["dfn"], outer_tmpl["final_norm"]), dhead,
+                 _unlift(st["demb"], outer_tmpl["embed"]), st["nll"][0])
+        return (st["wbuf"], carry, st["pos"], st["inv_n"][0], st["n_tok"][0])
+
+    # ---- the one-dispatch scan executor (training hot path) ---------------
+    def grad_fn(params, batch):
+        outer_g, shared_g = outer_ctx(params)
+        X0, pos, n_tok, inv_n = data_ctx(outer_g, batch)
+        ctx = dict(outer_g=outer_g, shared_g=shared_g, batch=batch,
+                   pos=pos, inv_n=inv_n, n_tok=n_tok)
+        wbuf = wbuf_init(params)
+        carry = init_carry(outer_g, shared_g, X0, wbuf)
+        # ---- run the tick segments (gather boundaries are static) --------
+        for (t0, t1, chunks) in segments:
+            if partitioned:
+                for v2 in chunks:
+                    wbuf = update_wbuf(wbuf, gather_chunk(params, v2), v2)
+            if t1 > t0:
+                xs = {k: r[t0:t1] for k, r in ROWS.items()}
+                carry, _ = compat.scan(make_tick(ctx, wbuf), carry, xs)
+        return epilogue(ctx, carry, params)
+
+    return PipelineExecutor(
+        grad_fn=grad_fn, outer_ctx=outer_ctx, data_ctx=data_ctx,
+        init_carry=init_carry, wbuf_init=wbuf_init,
+        gather_chunk=gather_chunk, update_wbuf=update_wbuf,
+        make_tick=make_tick, epilogue=epilogue, pack_state=pack_state,
+        unpack_state=unpack_state, table=table, segments=segments,
+        rows=ROWS, rows_np=_table_rows_np(table), partitioned=partitioned,
+        outer_tmpl=outer_tmpl)
 
 
 # ---------------------------------------------------------------------------
@@ -603,7 +717,7 @@ def make_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec, *,
     to rematerialize."""
     del remat
     return _make_tick_grad_fn(cfg, axis, spec, None, partitioned=False,
-                              stage_axis=stage_axis, table=table)
+                              stage_axis=stage_axis, table=table).grad_fn
 
 
 def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
@@ -619,4 +733,21 @@ def make_partitioned_pipeline_grad_fn(cfg: ModelConfig, axis: AxisCtx,
     del remat
     return _make_tick_grad_fn(cfg, axis, spec, layer_template,
                               partitioned=True, stage_axis=stage_axis,
-                              table=table)
+                              table=table).grad_fn
+
+
+def make_pipeline_executor(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
+                           layer_template: PyTree | None = None, *,
+                           partitioned: bool = False,
+                           stage_axis: str = "stage",
+                           table=None) -> PipelineExecutor:
+    """The executor split into its pieces (``PipelineExecutor``) — the
+    segmented-execution entry point (``stepfn.build_pipeline_tick_profiler``
+    wraps the pieces in per-tick jitted dispatches so ``obs/trace`` can
+    host-time every tick of the schedule)."""
+    if partitioned:
+        assert layer_template is not None, \
+            "partitioned executor needs the global layer template"
+    return _make_tick_grad_fn(cfg, axis, spec, layer_template,
+                              partitioned=partitioned,
+                              stage_axis=stage_axis, table=table)

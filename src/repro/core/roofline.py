@@ -205,3 +205,15 @@ def model_flops_train(cfg, global_batch: int, seq: int) -> float:
 
 def model_flops_decode(cfg, global_batch: int) -> float:
     return 2.0 * cfg.param_count(active_only=True) * global_batch
+
+
+def mfu(flops_per_step: float, step_time_s: float, *, n_devices: int = 1,
+        peak_flops: float | None = None) -> float:
+    """Model-flops utilization: model flops of one step over the hardware
+    flops the mesh could have delivered in its wall time.  The denominator's
+    peak defaults to PEAK_FLOPS (one chip, bf16) — the telemetry layer
+    (obs/metrics.py) reports this against the 6ND numerator above."""
+    peak = PEAK_FLOPS if peak_flops is None else peak_flops
+    if step_time_s <= 0 or peak <= 0 or n_devices <= 0:
+        return 0.0
+    return flops_per_step / (step_time_s * n_devices * peak)

@@ -378,6 +378,147 @@ def build_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, spec,
     return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
 
 
+@dataclasses.dataclass
+class PipelineTickProfiler:
+    """Segmented (one-dispatch-per-tick) pipeline execution, for host-timed
+    tick telemetry (``obs/trace.measure_tick_timeline``).
+
+    ``init``/``gather``/``tick``/``finish`` are jitted shard_map'd functions
+    over the same storage/batch layouts as ``build_pipeline_train_step``; the
+    executor state crosses the per-tick jit boundary as a flat dict whose
+    leaves merge `stage`(+`data`) onto dim 0.  ``gather`` takes the local
+    chunk index as a TRACED scalar (pass ``np.int32(v)``) and ``tick`` takes
+    the table row as [S] arrays, so one compile each serves the whole pass.
+    """
+    table: Any
+    segments: list
+    rows_np: dict
+    init: Any        # (storage, batch) -> state
+    gather: Any      # (state, storage, v2) -> state
+    tick: Any        # (state, storage, batch, rows) -> state
+    finish: Any      # (state, storage, batch) -> (grads, metrics)
+    executor: Any
+    last_state: Any = None
+
+
+def build_pipeline_tick_profiler(cfg: ModelConfig, mesh: Mesh, spec, *,
+                                 partitioned: bool = True, table=None):
+    """The opt-in segmented-execution mode of the tick-table executor: the
+    same ``PipelineExecutor`` pieces the one-dispatch scan step composes, but
+    wrapped one-tick-per-dispatch so the host can time every tick of the
+    schedule (``obs/trace.measure_tick_timeline`` drives it, ``obs/drift``
+    aligns the result against the plan's predicted timeline).  ``finish``
+    runs the epilogue on the final state — the parity hook: its (grads,
+    metrics) must match the scan executor's bit-for-bit ordering modulo
+    float reassociation."""
+    from repro.core import pipeline as pp
+
+    axis = axis_ctx(mesh)
+    assert "stage" in mesh.axis_names, mesh.axis_names
+    assert axis.pod is None, "tick profiler: single-pod meshes only"
+    if partitioned:
+        assert axis.data, "partitioned pipeline storage needs a `data` axis"
+    if table is None:
+        table = spec.tick_table()
+    table.validate_executable()
+    tmpl = full_template(cfg)
+    layer_template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), tmpl["layers"])
+    ex = pp.make_pipeline_executor(
+        cfg, axis, spec, layer_template if partitioned else None,
+        partitioned=partitioned, table=table)
+
+    sspecs = pipeline_storage_specs(cfg, axis, partitioned)
+    bspecs = batch_specs(cfg, axis, microbatched=True)
+    mspecs = {"loss": P(), "ntok": P()}
+    lspecs = T.layer_specs(cfg, axis.tp)
+    outer_specs = {k: v for k, v in T.param_specs(cfg, axis.tp).items()
+                   if k != "layers"}
+    isP = lambda x: isinstance(x, P)   # noqa: E731
+
+    # ---- state specs: merge stage(+data) onto dim 0 of every leaf --------
+    # Carry leaves are per-stage (and per-data-shard) values with no mesh
+    # dims of their own, so the jit boundary stacks the shards along dim 0.
+    # A PartitionSpec shorter than the leaf rank leaves trailing dims
+    # unsharded, so P(merge) covers any all-replicated leaf; only the
+    # model-sharded weight/grad leaves need their full specs appended.
+    merge = tuple(a for a in ("stage", axis.data) if a)
+
+    def _merge0(sp):
+        t = tuple(sp)
+        d0 = t[0] if t else None
+        d0 = tuple(a for a in (d0 if isinstance(d0, tuple) else (d0,)) if a)
+        return P((*merge, *d0), *t[1:])
+
+    def _outer_state_specs(spec_tree, tmpl_tree):
+        return jax.tree.map(
+            lambda sp, t: P(merge) if t.ndim == 0 else _merge0(sp),
+            spec_tree, tmpl_tree, is_leaf=isP)
+
+    wspec = jax.tree.map(lambda sp: P(merge, *sp), lspecs, is_leaf=isP)
+    otmpl = ex.outer_tmpl
+    stspecs = {
+        "wbuf": wspec, "dW": wspec,
+        "act": P(merge), "cot": P(merge), "dX0": P(merge),
+        "dsh": _outer_state_specs(outer_specs.get("shared", {}),
+                                  otmpl.get("shared", {})),
+        "dfn": _outer_state_specs(outer_specs["final_norm"],
+                                  otmpl["final_norm"]),
+        "demb": _outer_state_specs(outer_specs["embed"], otmpl["embed"]),
+        "nll": P(merge), "pos": P(merge), "inv_n": P(merge),
+        "n_tok": P(merge),
+    }
+    if not cfg.tie_embeddings:
+        stspecs["dhead"] = _outer_state_specs(outer_specs["head"],
+                                              otmpl["head"])
+
+    def _init(storage, batch):
+        outer_g, shared_g = ex.outer_ctx(storage)
+        X0, pos, n_tok, inv_n = ex.data_ctx(outer_g, batch)
+        wbuf = ex.wbuf_init(storage)
+        carry = ex.init_carry(outer_g, shared_g, X0, wbuf)
+        return ex.pack_state(wbuf, carry, pos, inv_n, n_tok)
+
+    def _gather(state, storage, v2):
+        wbuf, carry, pos, inv_n, n_tok = ex.unpack_state(state)
+        wbuf = ex.update_wbuf(wbuf, ex.gather_chunk(storage, v2), v2)
+        return ex.pack_state(wbuf, carry, pos, inv_n, n_tok)
+
+    def _ctx(outer_g, shared_g, batch, pos, inv_n, n_tok):
+        return dict(outer_g=outer_g, shared_g=shared_g, batch=batch,
+                    pos=pos, inv_n=inv_n, n_tok=n_tok)
+
+    def _tick(state, storage, batch, rows):
+        wbuf, carry, pos, inv_n, n_tok = ex.unpack_state(state)
+        outer_g, shared_g = ex.outer_ctx(storage)
+        ctx = _ctx(outer_g, shared_g, batch, pos, inv_n, n_tok)
+        carry, _ = ex.make_tick(ctx, wbuf)(carry, rows)
+        return ex.pack_state(wbuf, carry, pos, inv_n, n_tok)
+
+    def _finish(state, storage, batch):
+        wbuf, carry, pos, inv_n, n_tok = ex.unpack_state(state)
+        outer_g, shared_g = ex.outer_ctx(storage)
+        return ex.epilogue(_ctx(outer_g, shared_g, batch, pos, inv_n, n_tok),
+                           carry, storage)
+
+    # The state leaves stay typed "varying" in ways the per-piece signatures
+    # can't all express (e.g. psummed scalars round-tripping through the
+    # boundary); this is the measurement path, numerics are pinned by the
+    # segmented-vs-scan parity test, so the vma check is waived (same waiver
+    # as gather_params).
+    def sm(fn, in_specs, out_specs):
+        return jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                        out_specs=out_specs, check_vma=False))
+
+    return PipelineTickProfiler(
+        table=table, segments=ex.segments, rows_np=ex.rows_np,
+        init=sm(_init, (sspecs, bspecs), stspecs),
+        gather=sm(_gather, (stspecs, sspecs, P()), stspecs),
+        tick=sm(_tick, (stspecs, sspecs, bspecs, P()), stspecs),
+        finish=sm(_finish, (stspecs, sspecs, bspecs), (sspecs, mspecs)),
+        executor=ex)
+
+
 def make_pipeline_sq_reduce(cfg: ModelConfig, axis: AxisCtx,
                             partitioned: bool, *, stage_axis: str = "stage"):
     """Global grad sum-of-squares over the pipeline storage layout.

@@ -86,6 +86,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--dump-table", action="store_true",
                     help="print the winner's embedded tick table (the "
                          "schedule-as-data contract launch.train interprets)")
+    ap.add_argument("--format", default="json", choices=["json", "chrome"],
+                    help="--dump-table output: the table JSON itself, or a "
+                         "Chrome-trace (Perfetto-loadable) rendering of the "
+                         "simulator's predicted timeline for it, written "
+                         "through the shared obs/trace.py writer")
+    ap.add_argument("--table-out", default=None,
+                    help="file for --dump-table --format chrome (default "
+                         "tick_table_trace.json)")
     args = ap.parse_args(argv)
 
     if args.arch.startswith("paper-x") or args.arch == "paper-x":
@@ -127,12 +135,43 @@ def main(argv=None) -> dict:
                       f"S={tab.n_stages} V={tab.n_chunks} "
                       f"k_c={tab.layers_per_chunk} M={tab.n_microbatches} "
                       f"T={tab.n_ticks}")
-                print(json.dumps(tt))
+                if args.format == "chrome":
+                    _dump_table_chrome(tab, args.table_out
+                                       or "tick_table_trace.json")
+                else:
+                    print(json.dumps(tt))
 
     if args.out:
         planlib.save_plan(doc, args.out)
         print(f"plan written to {args.out}")
     return doc
+
+
+def _dump_table_chrome(tab, path: str) -> str:
+    """Render the table's simulator-predicted timeline as a Chrome trace via
+    the shared timeline writer — a unit cost model (fwd 1s, bwd 2s per
+    layer), so the trace shows the schedule's *shape* (bubbles, interleaving,
+    ring hops), not absolute hardware time."""
+    from repro.core.schedules import PipeSpec
+    from repro.obs import trace as obs_trace
+    from repro.planner.simulator import CostModel, simulate
+
+    spec = PipeSpec(tab.n_stages, tab.n_chunks * tab.layers_per_chunk,
+                    tab.n_microbatches, tab.schedule,
+                    n_chunks=tab.n_chunks)
+    cost = CostModel(flops_fwd_layer=1.0, flops_bwd_layer=2.0,
+                     act_bytes=0.0, layer_param_bytes=0.0,
+                     layer_grad_bytes=0.0, flops_rate=1.0,
+                     p2p_bw=1.0, coll_bw=1.0)
+    res = simulate(spec.sim_config(), cost, record_timeline=True)
+    tracer = obs_trace.Tracer()
+    obs_trace.add_timeline(tracer, res.timeline, pid=0,
+                           name=f"planned {tab.schedule} "
+                                f"S={tab.n_stages} M={tab.n_microbatches}",
+                           scale_us=1e6)
+    tracer.save(path)
+    print(f"chrome trace ({len(res.timeline)} units) written to {path}")
+    return path
 
 
 if __name__ == "__main__":

@@ -60,6 +60,9 @@ def main(argv=None) -> dict:
                          "mode and exit (no engine run)")
     ap.add_argument("--plan-mean-ctx", type=int, default=2048)
     ap.add_argument("--plan-max-seq", type=int, default=4096)
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace JSON of engine prefill/decode "
+                         "spans here (obs/trace.py)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
@@ -87,10 +90,15 @@ def main(argv=None) -> dict:
     pcfg = PagedCacheConfig(
         num_blocks=args.num_blocks, block_size=args.block_size,
         max_blocks_per_seq=-(-max_tok // args.block_size))
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
     engine = ServingEngine(
         cfg, params, SchedulerConfig(cache=pcfg, max_batch=args.max_batch,
                                      mode=args.mode),
-        axis=axis, use_pallas=None if not args.no_kernels else False)
+        axis=axis, use_pallas=None if not args.no_kernels else False,
+        tracer=tracer)
 
     rng = np.random.default_rng(args.seed)
     reqs = poisson_trace(
@@ -104,6 +112,7 @@ def main(argv=None) -> dict:
     outputs = engine.run()
     dt = time.time() - t0
     lat = [r.finish_step - r.arrival for r in engine.finished.values()]
+    lsum = engine.latency_summary()
     result = {
         "arch": args.arch, "mode": args.mode,
         "requests": len(outputs),
@@ -112,8 +121,12 @@ def main(argv=None) -> dict:
         "preemptions": engine.stats["preemptions"],
         "tok_per_s": round(engine.stats["emitted_tokens"] / dt, 1),
         "mean_latency_steps": round(float(np.mean(lat)), 2),
+        "ttft_ms": lsum["ttft_ms"], "itl_ms": lsum["itl_ms"],
         "seconds": round(dt, 2),
     }
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"engine trace written to {args.trace}")
     for rid in sorted(outputs)[:4]:
         print(f"  req{rid}: {outputs[rid]}")
     print(json.dumps(result))

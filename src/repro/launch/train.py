@@ -21,6 +21,7 @@ explicitly); explicit CLI flags still win over the plan.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -34,6 +35,9 @@ from repro.core.accumulation import AccumConfig
 from repro.core.schedules import PipeSpec
 from repro.data.synthetic import DataConfig, batch_for
 from repro.launch.mesh import make_train_mesh
+from repro.obs import drift as obs_drift
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim.adam import AdamConfig, adam_init
 
 
@@ -102,6 +106,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--metrics", default=None,
+                    help="stream per-step metrics (loss, step time, tokens/s,"
+                         " MFU) to this JSONL file; flushed per record so a "
+                         "crashed run keeps everything up to the failed step")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace (Perfetto-loadable) JSON of "
+                         "the run phases here; with --stages > 1 it also "
+                         "holds the measured per-tick stage timeline from a "
+                         "segmented profiling pass, next to the plan's "
+                         "predicted timeline")
+    ap.add_argument("--drift-report", default=None,
+                    help="with --stages > 1: run a segmented profiling pass "
+                         "and write the measured-vs-predicted tick timeline "
+                         "drift report (obs/drift.py) to this JSON file")
     args = ap.parse_args(argv)
     args.plan_tick_table = None
     if args.plan:
@@ -117,6 +135,23 @@ def main(argv=None) -> dict:
     partitioned = not args.no_partition
     opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                          decay_steps=args.steps)
+
+    n_devices = args.stages * d * m
+    tokens_per_step = args.global_batch * args.seq_len
+    sink = obs_metrics.MetricsSink(
+        args.metrics,
+        meta={"arch": args.arch, "smoke": args.smoke, "mesh": args.mesh,
+              "stages": args.stages,
+              "schedule": args.schedule if args.stages > 1 else None,
+              "global_batch": args.global_batch, "seq_len": args.seq_len,
+              "n_devices": n_devices, "partitioned": partitioned})
+    tracer = obs_trace.Tracer() if args.trace else None
+
+    def span(name, **kw):
+        return (tracer.span(name, **kw) if tracer
+                else contextlib.nullcontext())
+
+    exec_table = None
     if args.stages > 1:
         from repro.planner import simulator as simlib
 
@@ -151,21 +186,28 @@ def main(argv=None) -> dict:
                     f"M={table.n_microbatches}) does not match the resolved "
                     f"execution (schedule={spec.schedule}, S={spec.n_stages}, "
                     f"M={spec.n_microbatches})")
+        exec_table = table if table is not None else spec.tick_table()
         try:
-            step = stepfn.build_pipeline_train_step(
-                cfg, mesh, spec, opt_cfg, partitioned=partitioned,
-                donate=False, table=table)
+            with span("build_step"):
+                step = stepfn.build_pipeline_train_step(
+                    cfg, mesh, spec, opt_cfg, partitioned=partitioned,
+                    donate=False, table=exec_table)
         except NotImplementedError as e:
             ap.error(str(e))   # non-executable tick kinds (zero-bubble stub)
-        storage = stepfn.init_pipeline_storage(
-            cfg, mesh, jax.random.PRNGKey(args.seed), spec,
-            partitioned=partitioned)
+        with span("init_storage"):
+            storage = stepfn.init_pipeline_storage(
+                cfg, mesh, jax.random.PRNGKey(args.seed), spec,
+                partitioned=partitioned)
     else:
         acc = AccumConfig(method=args.method, partitioned=partitioned,
                           n_microbatches=args.microbatches)
-        step = stepfn.build_train_step(cfg, mesh, acc, opt_cfg, donate=False)
-        storage = stepfn.init_storage(cfg, mesh, jax.random.PRNGKey(args.seed),
-                                      partitioned=partitioned)
+        with span("build_step"):
+            step = stepfn.build_train_step(cfg, mesh, acc, opt_cfg,
+                                           donate=False)
+        with span("init_storage"):
+            storage = stepfn.init_storage(cfg, mesh,
+                                          jax.random.PRNGKey(args.seed),
+                                          partitioned=partitioned)
     opt = adam_init(storage, moment_dtype=opt_cfg.moment_dtype)
 
     start = 0
@@ -177,25 +219,79 @@ def main(argv=None) -> dict:
                       global_batch=args.global_batch,
                       n_microbatches=args.microbatches, seed=args.seed)
     history = []
+    result: dict = {}
     t_start = time.time()
-    for i in range(start, start + args.steps):
-        batch = batch_for(cfg, data, i)
-        storage, opt, metrics = step(storage, opt, batch)
-        loss = float(metrics["loss"])
-        history.append(loss)
-        if i % args.log_every == 0:
-            print(f"step {i:5d}  loss {loss:8.4f}  lr {float(metrics['lr']):.2e}"
-                  f"  gnorm {float(metrics['grad_norm']):7.3f}"
-                  f"  {time.time()-t_start:6.1f}s", flush=True)
-        if (args.checkpoint_every and args.checkpoint_dir
-                and (i + 1) % args.checkpoint_every == 0):
-            store.save_state(args.checkpoint_dir, storage, step=i + 1,
-                             meta={"arch": args.arch, "loss": loss})
-    result = {"arch": args.arch, "first_loss": history[0],
-              "last_loss": history[-1], "steps": len(history),
-              "seconds": round(time.time() - t_start, 1)}
-    print(json.dumps(result))
-    return result
+    # Everything below streams through the sink and is flushed per record;
+    # the finally block writes the summary line and saves the trace even
+    # when a step raises or the run is interrupted — a crashed run keeps
+    # its telemetry up to the failed step (it used to lose all output).
+    try:
+        for i in range(start, start + args.steps):
+            batch = batch_for(cfg, data, i)
+            t0 = time.perf_counter()
+            with span("train step", cat="step", step=i):
+                storage, opt, metrics = step(storage, opt, batch)
+                loss = float(metrics["loss"])     # device sync: ends the step
+            dt = time.perf_counter() - t0
+            tok_s = tokens_per_step / dt
+            rec = {"step": i, "loss": loss, "lr": float(metrics["lr"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "step_time_s": dt, "tokens_per_s": tok_s,
+                   "mfu": obs_metrics.mfu_estimate(
+                       cfg, global_batch=args.global_batch,
+                       seq_len=args.seq_len, step_time_s=dt,
+                       n_devices=n_devices)}
+            sink.log(rec)
+            history.append(loss)
+            if i % args.log_every == 0:
+                print(f"step {i:5d}  loss {loss:8.4f}"
+                      f"  lr {float(metrics['lr']):.2e}"
+                      f"  gnorm {float(metrics['grad_norm']):7.3f}"
+                      f"  {tok_s:9.0f} tok/s"
+                      f"  {time.time()-t_start:6.1f}s", flush=True)
+            if (args.checkpoint_every and args.checkpoint_dir
+                    and (i + 1) % args.checkpoint_every == 0):
+                store.save_state(args.checkpoint_dir, storage, step=i + 1,
+                                 meta={"arch": args.arch, "loss": loss})
+
+        # ---- segmented profiling pass: measured tick timeline + drift ----
+        if exec_table is not None and (args.trace or args.drift_report):
+            with span("tick profiling"):
+                prof = stepfn.build_pipeline_tick_profiler(
+                    cfg, mesh, spec, partitioned=partitioned,
+                    table=exec_table)
+                events = obs_trace.measure_tick_timeline(
+                    prof, storage, batch_for(cfg, data, 0), warmup=1,
+                    tracer=tracer, pid=1)
+            predicted = exec_table.timeline()
+            if tracer is not None and events:
+                # render the plan's unit-tick timeline at the measured
+                # mean tick length, so the lanes align side by side
+                mk = max(e[5] for e in events)
+                tracer.name_process(2, "planned ticks")
+                obs_trace.add_timeline(
+                    tracer, predicted, pid=2, name="planned ticks",
+                    scale_us=mk * 1e6 / max(exec_table.n_ticks, 1))
+            if args.drift_report:
+                rep = obs_drift.drift_report(events, predicted)
+                obs_drift.save_report(rep, args.drift_report)
+                print(obs_drift.format_report(rep))
+                sink.log(event="drift",
+                         record={"max_abs_drift": rep["max_abs_drift"],
+                                 "matched": rep["overall"]["matched"],
+                                 "missing": rep["overall"]["missing"],
+                                 "extra": rep["overall"]["extra"]})
+                result["max_abs_drift"] = rep["max_abs_drift"]
+
+        result.update({"arch": args.arch, "first_loss": history[0],
+                       "last_loss": history[-1], "steps": len(history),
+                       "seconds": round(time.time() - t_start, 1)})
+        print(json.dumps(result))
+        return result
+    finally:
+        if tracer is not None and args.trace:
+            tracer.save(args.trace)
+        sink.close(extra=result or None)
 
 
 if __name__ == "__main__":

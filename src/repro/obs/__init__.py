@@ -1,0 +1,17 @@
+"""Telemetry: structured metrics, span tracing, measured-vs-planned drift.
+
+The three modules close the predicted -> measured loop the planner opened:
+
+  metrics.py   jit-safe on-device metric pytrees + a host-side ``MetricsSink``
+               streaming JSONL (crash-surviving: every line is flushed, the
+               summary is written from ``close()``/``__exit__``).
+  trace.py     span tracing with a Chrome-trace (Perfetto-loadable) exporter;
+               one shared timeline writer renders both the simulator's
+               predicted timelines and the segmented executor's measured
+               per-tick stage timings.
+  drift.py     aligns a measured tick timeline against the plan's embedded
+               ``TickTable`` timeline (same ``(stage, kind, chunk,
+               microbatch, start, end)`` schema) and reports per-kind drift —
+               the diff a ``CostModel`` calibration fits against.
+"""
+from repro.obs import drift, metrics, trace  # noqa: F401

@@ -379,6 +379,24 @@ class TickTable:
             out["psum_scatter_data"] = self.n_chunks * n_layer_leaves
         return out
 
+    def timeline(self) -> list:
+        """The table's own predicted timeline in the shared observability
+        schema ``(stage, kind, chunk, microbatch, start, end)`` — one time
+        unit per tick, every non-idle unit spanning ``[t, t+1)``.  This is
+        the lockstep rendering the segmented executor measurement
+        (obs/trace.measure_tick_timeline) also produces, so the two align
+        directly in ``obs/drift.drift_report``."""
+        names = {TICK_F: "F", TICK_B: "B", TICK_BDGRAD: "Bd",
+                 TICK_BWGRAD: "Bw"}
+        out = []
+        for t, row in enumerate(self.kind):
+            for s, k in enumerate(row):
+                if k == TICK_IDLE:
+                    continue
+                out.append((s, names[k], self.unit_v[t][s],
+                            self.unit_mb[t][s], float(t), float(t + 1)))
+        return out
+
     def to_json(self) -> dict:
         return {
             "schedule": self.schedule,

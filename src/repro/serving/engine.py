@@ -24,6 +24,7 @@ or their token budget, and their blocks return to the pool.
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax.numpy as jnp
@@ -48,10 +49,14 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: PyTree, scfg: SchedulerConfig,
                  *, axis: AxisCtx | None = None,
                  use_pallas: bool | None = None,
-                 fn_cache: dict | None = None):
+                 fn_cache: dict | None = None,
+                 tracer=None, clock=time.perf_counter):
         """``fn_cache``: optional dict shared between engines of the SAME
         (cfg, axis, use_pallas) so repeated runs (benchmark treatments)
-        reuse the jitted step fns instead of recompiling."""
+        reuse the jitted step fns instead of recompiling.  ``tracer``: an
+        optional ``obs.trace.Tracer`` recording prefill/decode spans;
+        ``clock`` stamps per-request wall-clock TTFT/ITL telemetry
+        (``latency_summary``)."""
         assert cfg.input_mode == "tokens", cfg.input_mode
         self.cfg = cfg
         self.params = params
@@ -74,6 +79,8 @@ class ServingEngine:
         self.stats = {"engine_steps": 0, "decode_steps": 0,
                       "prefill_calls": 0, "prefill_tokens": 0,
                       "emitted_tokens": 0, "preemptions": 0}
+        self.tracer = tracer
+        self._clock = clock
 
     # -- submission ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -122,6 +129,7 @@ class ServingEngine:
     def _emit(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
         req.pending = tok
+        req.token_walls.append(self._clock())
         self.stats["emitted_tokens"] += 1
         if req.done:
             self.sched.finish(req, self.t)
@@ -139,10 +147,21 @@ class ServingEngine:
     # -- one engine step --------------------------------------------------
     def step(self) -> dict:
         now = self.t
+        wall = self._clock()
+        # TTFT starts when the engine first SEES a request (arrival step
+        # reached), not when a slot frees up — queueing is part of latency
+        for r in self.sched.waiting:
+            if r.arrival <= now and r.wall_visible is None:
+                r.wall_visible = wall
         pre_preempt = self.stats["preemptions"]
         admitted = self.sched.admit(now)
         if admitted:
-            self._run_prefill([r for r in admitted])
+            if self.tracer is not None:
+                with self.tracer.span("prefill", cat="serve", tid=0,
+                                      step=now, batch=len(admitted)):
+                    self._run_prefill([r for r in admitted])
+            else:
+                self._run_prefill([r for r in admitted])
         # capacity for every live request's next write, highest priority
         # first (ensure_block may preempt lower-priority tables)
         for r in sorted(self.sched.running,
@@ -155,10 +174,16 @@ class ServingEngine:
         decoded = 0
         if self.sched.running:
             self._sync_slots()
+            t0 = self.tracer.now_us() if self.tracer is not None else 0.0
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self._tables),
                 jnp.asarray(self._lens), jnp.asarray(self._tokens))
             nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            if self.tracer is not None:
+                self.tracer.complete(
+                    "decode", ts_us=t0, dur_us=self.tracer.now_us() - t0,
+                    cat="serve", tid=1,
+                    args={"step": now, "batch": len(self.sched.running)})
             for r in list(self.sched.running):
                 r.cached += 1
                 self._emit(r, int(nxt[r.slot]))
@@ -170,6 +195,26 @@ class ServingEngine:
                 "running": len(self.sched.running),
                 "waiting": len(self.sched.waiting),
                 "preempted": self.stats["preemptions"] - pre_preempt}
+
+    # -- latency telemetry -------------------------------------------------
+    def latency_summary(self) -> dict:
+        """Wall-clock TTFT / inter-token-latency percentiles (ms) over the
+        finished requests.  TTFT counts from engine *visibility* (arrival
+        step reached), so scheduler queueing and preemption re-prefills show
+        up in the tail — the serving numbers BENCH_serving.json reports."""
+        from repro.obs.metrics import percentiles
+
+        ttft, itl = [], []
+        for r in self.finished.values():
+            w = r.token_walls
+            if not w:
+                continue
+            if r.wall_visible is not None:
+                ttft.append((w[0] - r.wall_visible) * 1e3)
+            itl.extend((b - a) * 1e3 for a, b in zip(w, w[1:]))
+        return {"n_requests": len(self.finished),
+                "ttft_ms": percentiles(ttft),
+                "itl_ms": percentiles(itl)}
 
     def run(self, *, max_steps: int = 100_000) -> dict[int, list[int]]:
         """Drive until every submitted request finishes."""

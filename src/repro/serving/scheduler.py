@@ -60,6 +60,9 @@ class Request:
     pending: int | None = None       # last emitted token = next decode input
     preemptions: int = 0
     finish_step: int = -1
+    # wall-clock latency telemetry (engine-stamped; obs/metrics percentiles)
+    wall_visible: float | None = None   # host time the engine first saw it
+    token_walls: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = tuple(self.prompt)

@@ -45,6 +45,13 @@ KEY_METRICS: dict[str, dict[str, str]] = {
         # continuous-batching throughput win over static batching
         "continuous_speedup": "higher",
         "continuous_tok_s": "higher",
+        # wall-clock request latency percentiles (engine.latency_summary);
+        # gate-active only once a baseline containing them is committed —
+        # until then they are fresh-only and reported as NOTE lines
+        "serving_ttft_p50_ms": "lower",
+        "serving_ttft_p99_ms": "lower",
+        "serving_itl_p50_ms": "lower",
+        "serving_itl_p99_ms": "lower",
     },
     "BENCH_pipeline": {
         # ZeRO-partitioned step time relative to replicated (same-run ratio)
@@ -82,6 +89,12 @@ def compare_suite(name: str, base: dict, fresh: dict,
             fails.append(moved + f"  [key metric regressed > {threshold:.0%}]")
         elif abs(rel) > threshold:
             warns.append(moved)
+    # key metrics present in the fresh run but absent from the baseline:
+    # not yet gated (comparison iterates baseline keys) — surface them so
+    # committing an updated baseline is a deliberate act, not a surprise
+    for metric in sorted(set(keys) & set(fd) - set(bd)):
+        print(f"NOTE  {name}: key metric {metric!r} = {fd[metric]} has no "
+              f"baseline yet (warn-only until one is committed)")
     return fails, warns
 
 
