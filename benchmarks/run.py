@@ -32,7 +32,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (kernels_bench, paper_tables, pipeline_bench,
-                            planner_bench, serving_bench, system_benches)
+                            planner_bench, resilience_bench, serving_bench,
+                            system_benches)
 
     benches = [
         ("table_6_1_fastest_configs", paper_tables.table_6_1),
@@ -48,6 +49,7 @@ def main() -> None:
         ("kernels", kernels_bench.bench_kernels_suite),
         ("serving", serving_bench.bench_serving),
         ("pipeline", pipeline_bench.bench_pipeline),
+        ("resilience", resilience_bench.bench_resilience),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

@@ -1,4 +1,4 @@
-"""Real-time, layer-wise streaming checkpoints (paper §8.2).
+"""Real-time, layer-wise streaming checkpoints (paper §8.2) + recovery layer.
 
 The paper's observation: with a partitioned training state and a layered
 schedule, each layer's state is touched exactly once per step, so streaming
@@ -6,21 +6,37 @@ it to external storage costs almost nothing (fig. 7: even hard drives are
 fast enough at scale) — reducing the potential loss from a crash to a single
 batch, and making elastic resharding cheap.
 
-This module implements that storage format:
+This module implements that storage format and the recovery contract the
+resilience layer (repro/resilience/) builds on:
+
   * one file per (leaf, layer) — a layer's chunk can be written the moment
     its optimizer update lands, without serialising the whole state;
-  * the manifest records the step, layout (partitioned or full) and tree
-    structure, so restore can re-partition onto a different mesh size
-    (elasticity, §8/§8.3);
+  * the manifest records the step, per-file sha256 checksums, and the
+    caller's meta (mesh/layout for elastic restore, §8/§8.3) — a torn or
+    bit-flipped file is *detected*, not silently loaded;
   * writes go to a temp file + atomic rename, so a crash mid-checkpoint
-    leaves the previous step's file intact.
+    leaves the previous step's file intact;
+  * checkpoints live in step-scoped subdirectories (``step_00000123/``), so
+    a crash mid-save of step N+1 can never interleave files with step N's
+    manifest; ``save_checkpoint`` keeps the last N *valid* checkpoints and
+    garbage-collects older ones;
+  * ``load_latest`` walks checkpoints newest-first, verifies checksums, and
+    falls back to an older step when the newest is corrupt — the
+    supervisor's bounded-rollback restore.
+
+All failure modes raise ``CheckpointError`` with the leaf path, the saved
+vs expected shape, and the manifest's recorded mesh/layout — never a bare
+``assert`` (which vanishes under ``python -O``) or a raw ``KeyError``.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
+import shutil
 import tempfile
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +45,15 @@ import numpy as np
 PyTree = Any
 
 MANIFEST = "manifest.json"
+STEP_DIR_RE = re.compile(r"^step_(\d{8})$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be saved, verified, or restored."""
+
+
+def step_dir_name(step: int) -> str:
+    return f"step_{step:08d}"
 
 
 def _leaf_name(path) -> str:
@@ -39,6 +64,14 @@ def _leaf_name(path) -> str:
         elif hasattr(k, "idx"):
             parts.append(str(k.idx))
     return "__".join(parts)
+
+
+def _sha256(fname: str) -> str:
+    h = hashlib.sha256()
+    with open(fname, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _atomic_save(fname: str, arr: np.ndarray) -> None:
@@ -69,50 +102,215 @@ def save_state(root: str, state: PyTree, *, step: int,
 
     Leaves under ``layerwise_key`` are split along their leading (layer) dim
     into one file each — the unit the real-time stream would emit per layer.
+    The manifest records a sha256 per file, so restore can tell a valid
+    checkpoint from a torn/corrupted one (``verify_files``).
     """
     os.makedirs(root, exist_ok=True)
     entries = []
+    files: dict[str, str] = {}
+
+    def record(fname: str) -> None:
+        rel = os.path.relpath(fname, root)
+        files[rel] = _sha256(fname)
+
     for path, leaf in jax.tree_util.tree_leaves_with_path(state):
         name = _leaf_name(path)
         arr = np.asarray(leaf)
         top = str(getattr(path[0], "key", ""))
         if top == layerwise_key and arr.ndim >= 1:
             for l in range(arr.shape[0]):
-                save_leaf(root, name, arr[l], layer=l)
+                record(save_leaf(root, name, arr[l], layer=l))
             entries.append({"name": name, "layers": int(arr.shape[0]),
                             "shape": list(arr.shape), "dtype": str(arr.dtype)})
         else:
-            save_leaf(root, name, arr)
+            record(save_leaf(root, name, arr))
             entries.append({"name": name, "layers": 0,
                             "shape": list(arr.shape), "dtype": str(arr.dtype)})
-    manifest = {"step": step, "entries": entries, "meta": meta or {}}
+    manifest = {"step": step, "entries": entries, "meta": meta or {},
+                "files": files}
     with open(os.path.join(root, MANIFEST + ".tmp"), "w") as f:
         json.dump(manifest, f, indent=1)
     os.replace(os.path.join(root, MANIFEST + ".tmp"), os.path.join(root, MANIFEST))
 
 
 def load_manifest(root: str) -> dict:
-    with open(os.path.join(root, MANIFEST)) as f:
-        return json.load(f)
+    fname = os.path.join(root, MANIFEST)
+    if not os.path.exists(fname):
+        raise CheckpointError(f"no checkpoint manifest at {fname}")
+    try:
+        with open(fname) as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointError(f"torn/corrupt manifest at {fname}: {e}") from e
+
+
+def verify_files(root: str, manifest: dict | None = None) -> list[str]:
+    """Relative names of files that are missing or fail their manifest
+    checksum.  Empty list == checkpoint is intact.  Pre-checksum manifests
+    (no ``files`` map) have nothing to verify and return []."""
+    manifest = manifest if manifest is not None else load_manifest(root)
+    bad = []
+    for rel, want in manifest.get("files", {}).items():
+        fname = os.path.join(root, rel)
+        if not os.path.exists(fname) or _sha256(fname) != want:
+            bad.append(rel)
+    return sorted(bad)
+
+
+def _layout_note(manifest: dict) -> str:
+    meta = manifest.get("meta", {})
+    layout = meta.get("layout")
+    return (f"; manifest records step {manifest.get('step')}, "
+            f"mesh/layout {layout}" if layout is not None
+            else f"; manifest records step {manifest.get('step')}")
 
 
 def load_state(root: str, like: PyTree) -> tuple[PyTree, int]:
-    """Restore a checkpoint into the structure of ``like`` (shape-checked)."""
+    """Restore a checkpoint into the structure of ``like`` (shape-checked).
+
+    ``like`` leaves only need ``.shape`` and ``.dtype`` — pass real arrays or
+    ``jax.ShapeDtypeStruct`` templates.  Mismatches raise ``CheckpointError``
+    naming the leaf path, saved vs expected shape, and the manifest's
+    recorded mesh/layout (an elastic restore onto a different mesh must go
+    through ``repro.resilience.reshard``, not this loader).
+    """
     manifest = load_manifest(root)
     by_name = {e["name"]: e for e in manifest["entries"]}
 
+    def read(fname: str) -> np.ndarray:
+        try:
+            return np.load(fname)
+        except (OSError, ValueError) as e:
+            raise CheckpointError(
+                f"unreadable checkpoint file {fname}: {e}"
+                f"{_layout_note(manifest)}") from e
+
     def load(path, leaf):
         name = _leaf_name(path)
+        if name not in by_name:
+            known = ", ".join(sorted(by_name)) or "<none>"
+            raise CheckpointError(
+                f"checkpoint at {root} has no leaf {name!r} (tree path "
+                f"{jax.tree_util.keystr(path)}); saved leaves: {known}"
+                f"{_layout_note(manifest)}")
         e = by_name[name]
         if e["layers"]:
-            arrs = [np.load(os.path.join(root, f"{name}.L{l}.npy"))
+            arrs = [read(os.path.join(root, f"{name}.L{l}.npy"))
                     for l in range(e["layers"])]
             arr = np.stack(arrs)
         else:
-            arr = np.load(os.path.join(root, f"{name}.npy"))
+            arr = read(os.path.join(root, f"{name}.npy"))
         want = tuple(leaf.shape)
-        assert tuple(arr.shape) == want, (name, arr.shape, want)
+        if tuple(arr.shape) != want:
+            raise CheckpointError(
+                f"checkpoint leaf {name!r} (tree path "
+                f"{jax.tree_util.keystr(path)}): saved shape "
+                f"{tuple(arr.shape)} does not match expected {want}"
+                f"{_layout_note(manifest)}; to restore onto a different "
+                f"mesh, reshard via repro.resilience.reshard")
         return jnp.asarray(arr, dtype=leaf.dtype)
 
     state = jax.tree_util.tree_map_with_path(load, like)
     return state, manifest["step"]
+
+
+# ---------------------------------------------------------------------------
+# Step-scoped checkpoint directories (atomicity + GC + rollback restore)
+# ---------------------------------------------------------------------------
+def checkpoint_steps(root: str) -> list[tuple[int, str]]:
+    """(step, dir) of every step-scoped checkpoint under ``root``, ascending.
+
+    Only directories with a manifest count — a crash mid-save leaves a dir
+    without one, which is invisible here (and cleaned up by the next GC)."""
+    out = []
+    if not os.path.isdir(root):
+        return out
+    for entry in os.listdir(root):
+        m = STEP_DIR_RE.match(entry)
+        d = os.path.join(root, entry)
+        if m and os.path.exists(os.path.join(d, MANIFEST)):
+            out.append((int(m.group(1)), d))
+    return sorted(out)
+
+
+def save_checkpoint(root: str, state: PyTree, *, step: int,
+                    meta: dict | None = None, keep: int | None = None) -> str:
+    """Save ``state`` under ``root/step_<step>/`` and GC old checkpoints.
+
+    The step-scoped subdirectory means a crash mid-save can only ever leave
+    a partial *new* directory (whose manifest is written last, atomically) —
+    it can never interleave files with an older step's manifest.  ``keep``
+    retains the newest N valid checkpoints (see ``gc_checkpoints``)."""
+    d = os.path.join(root, step_dir_name(step))
+    save_state(d, state, step=step, meta=meta)
+    if keep is not None:
+        gc_checkpoints(root, keep=keep)
+    return d
+
+
+def gc_checkpoints(root: str, *, keep: int) -> list[str]:
+    """Delete step dirs older than the ``keep`` newest *valid* checkpoints.
+
+    Corrupt checkpoints do not count toward ``keep`` (they are useless as
+    fallbacks), but a corrupt dir newer than the keep-set is left in place
+    for post-mortem inspection; everything older than the Nth valid
+    checkpoint is removed.  Returns the removed paths."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    removed = []
+    valid_seen = 0
+    for step, d in reversed(checkpoint_steps(root)):
+        if valid_seen >= keep:
+            shutil.rmtree(d)
+            removed.append(d)
+            continue
+        try:
+            if not verify_files(d):
+                valid_seen += 1
+        except CheckpointError:
+            pass
+    return removed
+
+
+def restorable(root: str, *, max_rollback: int | None = None
+               ) -> Iterator[tuple[int, str, dict]]:
+    """Yield (step, dir, manifest) of *intact* checkpoints, newest first.
+
+    Corrupt or torn checkpoints are skipped (that is the fallback walk);
+    ``max_rollback`` bounds how many older-than-newest steps are tried."""
+    steps = list(reversed(checkpoint_steps(root)))
+    if max_rollback is not None:
+        steps = steps[:max_rollback + 1]
+    for step, d in steps:
+        try:
+            manifest = load_manifest(d)
+        except CheckpointError:
+            continue
+        if verify_files(d, manifest):
+            continue
+        yield step, d, manifest
+
+
+def load_latest(root: str, like: PyTree, *, max_rollback: int | None = None
+                ) -> tuple[PyTree, int, str]:
+    """Restore the newest checkpoint that passes checksum verification.
+
+    Walks ``root``'s step dirs newest-first, skipping corrupt ones (bounded
+    by ``max_rollback``); falls back to a legacy flat-layout checkpoint
+    (manifest directly under ``root``) for pre-step-dir checkpoints.
+    Returns ``(state, step, dir)``; raises ``CheckpointError`` naming every
+    rejected candidate when nothing restorable remains."""
+    tried = []
+    for step, d, _ in restorable(root, max_rollback=max_rollback):
+        try:
+            state, s = load_state(d, like)
+            return state, s, d
+        except CheckpointError as e:
+            tried.append(f"{d}: {e}")
+    if os.path.exists(os.path.join(root, MANIFEST)):     # legacy flat layout
+        if not verify_files(root):
+            state, s = load_state(root, like)
+            return state, s, root
+        tried.append(f"{root}: checksum verification failed")
+    detail = "; ".join(tried) if tried else "no step_* checkpoint dirs found"
+    raise CheckpointError(f"no valid checkpoint under {root}: {detail}")

@@ -136,6 +136,64 @@ def scatter_grad_local(grad_local: jnp.ndarray, axis_name, n_data: int,
 
 
 # ---------------------------------------------------------------------------
+# Host-side layout conversion (numpy; the elastic-reshard path)
+# ---------------------------------------------------------------------------
+def host_partition_leaf(full: "np.ndarray", spec: P, tp: int, n_data: int,
+                        *, stacked: bool) -> "np.ndarray":
+    """Global full leaf -> ALL devices' fp32 chunks, on the host.
+
+    The global-array analogue of ``partition_local``: output is
+    ``[L?, n_model, n_data, chunk]`` — exactly the global shape of
+    ``partitioned_shapes`` — built by splitting the 'model' spec dim first
+    (model-local flattening), then chunking each model shard over ``data``.
+    Pure reshape/pad/moveaxis, so values move bit-identically; the dtype is
+    widened to fp32 (the storage dtype) — cast back for non-fp32 trees."""
+    import numpy as np
+    x = np.asarray(full, dtype=np.float32)
+    m_dim = next((i for i, ax in enumerate(tuple(spec)) if ax == "model"),
+                 None)
+    lead = (x.shape[0],) if stacked else ()
+    if tp > 1 and m_dim is not None:
+        if x.shape[m_dim] % tp:
+            raise ValueError(f"tp={tp} does not divide dim {m_dim} of "
+                             f"shape {x.shape} (spec {spec})")
+        x = x.reshape(*x.shape[:m_dim], tp, x.shape[m_dim] // tp,
+                      *x.shape[m_dim + 1:])
+        x = np.moveaxis(x, m_dim, len(lead))       # [L?, tp, ...local...]
+        n_model = tp
+    else:
+        x = x.reshape(*lead, 1, *x.shape[len(lead):])
+        n_model = 1
+    flat = x.reshape(*lead, n_model, -1)
+    c = chunk_size(flat.shape[-1], n_data)
+    pad = [(0, 0)] * (flat.ndim - 1) + [(0, c * n_data - flat.shape[-1])]
+    flat = np.pad(flat, pad)
+    return flat.reshape(*lead, n_model, n_data, c)
+
+
+def host_unpartition_leaf(chunks: "np.ndarray", global_shape: tuple[int, ...],
+                          spec: P, tp: int, *, stacked: bool) -> "np.ndarray":
+    """ALL devices' chunks ``[L?, n_model, n_data, chunk]`` -> global full
+    leaf, on the host (exact inverse of ``host_partition_leaf``; drops the
+    chunk padding, keeps the chunks' dtype)."""
+    import numpy as np
+    x = np.asarray(chunks)
+    lshape = local_shape(global_shape, spec, tp)
+    m_dim = next((i for i, ax in enumerate(tuple(spec)) if ax == "model"),
+                 None)
+    lead = lshape[:1] if stacked else ()
+    body = lshape[1:] if stacked else lshape
+    n_model = x.shape[1] if stacked else x.shape[0]
+    numel = math.prod(body)
+    flat = x.reshape(*lead, n_model, -1)[..., :numel]
+    loc = flat.reshape(*lead, n_model, *body)
+    if n_model > 1 and m_dim is not None:
+        y = np.moveaxis(loc, len(lead), m_dim)     # shard axis before m_dim's
+        return y.reshape(global_shape)             # local dim, then merge
+    return loc.reshape(*lead, *body).reshape(global_shape)
+
+
+# ---------------------------------------------------------------------------
 # Tree-level helpers
 # ---------------------------------------------------------------------------
 def is_stacked_path(path) -> bool:

@@ -27,6 +27,7 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpointing import store
@@ -73,6 +74,55 @@ def apply_plan(args, argv) -> None:
     args.plan_tick_table = ex.get("tick_table")
 
 
+def _run_supervised(args, cfg, opt_cfg, d, m, partitioned) -> dict:
+    """Run under the resilience supervisor (--faults / --resume auto).
+
+    ``--steps`` is the *total* completed-step target here, not
+    steps-after-resume: a killed-and-resumed run finishes at the same step
+    as an unkilled one, which is what the trajectory-parity check needs.
+    """
+    from repro.resilience import faults as flt
+    from repro.resilience.reshard import MeshLayout
+    from repro.resilience.supervisor import Supervisor, SupervisorConfig
+
+    layout = MeshLayout(stages=args.stages, data=d, model=m,
+                        partitioned=partitioned, schedule=args.schedule,
+                        n_microbatches=args.microbatches)
+    plan_ex = None
+    if args.plan:
+        from repro.planner.plan import execution_of, load_plan
+        plan_ex = execution_of(load_plan(args.plan))
+    fault_plan = flt.FaultPlan.load(args.faults) if args.faults else None
+    sup = SupervisorConfig(
+        checkpoint_every=args.checkpoint_every or 1,
+        keep_checkpoints=args.keep_checkpoints, seed=args.seed)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      n_microbatches=args.microbatches, seed=args.seed)
+    sink = obs_metrics.MetricsSink(
+        args.metrics,
+        meta={"arch": args.arch, "smoke": args.smoke, "mesh": args.mesh,
+              "stages": args.stages, "supervised": True,
+              "global_batch": args.global_batch, "seq_len": args.seq_len,
+              "partitioned": partitioned,
+              "faults": fault_plan.to_json()["faults"] if fault_plan else []})
+    tracer = obs_trace.Tracer() if args.trace else None
+    sv = Supervisor(cfg, opt_cfg, data, layout, ckpt_root=args.checkpoint_dir,
+                    method=args.method, sup=sup, fault_plan=fault_plan,
+                    sink=sink, tracer=tracer, plan_execution=plan_ex)
+    result: dict = {}
+    try:
+        result = sv.run(args.steps)
+        result["arch"] = args.arch
+        print(json.dumps(result))
+        return result
+    finally:
+        if tracer is not None and args.trace:
+            tracer.save(args.trace)
+        sink.close(extra={k: v for k, v in result.items()
+                          if not isinstance(v, (list, dict))} or None)
+
+
 def main(argv=None) -> dict:
     # allow_abbrev=False: apply_plan detects explicitly-passed flags by their
     # full spelling, so abbreviations must not be silently accepted
@@ -104,7 +154,19 @@ def main(argv=None) -> dict:
                          "naming an unsupported schedule fails fast)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--resume", nargs="?", const="latest", default=None,
+                    choices=["latest", "auto"],
+                    help="latest: restore the newest valid checkpoint once "
+                         "and continue; auto: run under the resilience "
+                         "supervisor, which auto-resumes after crashes "
+                         "(bounded retries, checksum fallback)")
+    ap.add_argument("--faults", default=None,
+                    help="JSON fault plan (repro.resilience.faults) to "
+                         "inject deterministically; implies the supervised "
+                         "loop and requires --checkpoint-dir")
+    ap.add_argument("--keep-checkpoints", type=int, default=3,
+                    help="garbage-collect all but the newest N valid "
+                         "checkpoints after each save")
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--metrics", default=None,
                     help="stream per-step metrics (loss, step time, tokens/s,"
@@ -129,12 +191,20 @@ def main(argv=None) -> dict:
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     d, m = (int(v) for v in args.mesh.split("x"))
-    mesh = make_train_mesh(stages=args.stages, data=d, model=m)
     if m > 1:
         cfg = cfg.padded_for_tp(m)
     partitioned = not args.no_partition
     opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                          decay_steps=args.steps)
+
+    if args.faults or args.resume == "auto":
+        # fault injection / auto-resume: hand the run to the supervisor,
+        # which owns the (mesh, step, state) triple and survives crashes
+        if not args.checkpoint_dir:
+            ap.error("--faults / --resume auto require --checkpoint-dir")
+        return _run_supervised(args, cfg, opt_cfg, d, m, partitioned)
+
+    mesh = make_train_mesh(stages=args.stages, data=d, model=m)
 
     n_devices = args.stages * d * m
     tokens_per_step = args.global_batch * args.seq_len
@@ -210,9 +280,23 @@ def main(argv=None) -> dict:
                                           partitioned=partitioned)
     opt = adam_init(storage, moment_dtype=opt_cfg.moment_dtype)
 
+    layout_meta = {"stages": args.stages, "data": d, "model": m,
+                   "partitioned": partitioned, "schedule": args.schedule,
+                   "n_microbatches": args.microbatches}
     start = 0
     if args.resume and args.checkpoint_dir:
-        storage, start = store.load_state(args.checkpoint_dir, storage)
+        like = {"params": storage, "mu": opt["mu"], "nu": opt["nu"],
+                "opt_step": opt["step"]}
+        try:
+            bundle, start, _ = store.load_latest(args.checkpoint_dir, like)
+            storage = jax.tree.map(jnp.asarray, bundle["params"])
+            opt = {"mu": jax.tree.map(jnp.asarray, bundle["mu"]),
+                   "nu": jax.tree.map(jnp.asarray, bundle["nu"]),
+                   "step": jnp.asarray(bundle["opt_step"], jnp.int32)}
+        except store.CheckpointError:
+            # legacy flat checkpoint: params only, at the dir root (resumed
+            # moments are unavailable — Adam restarts its estimates)
+            storage, start = store.load_state(args.checkpoint_dir, storage)
         print(f"resumed from step {start}")
 
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
@@ -251,8 +335,14 @@ def main(argv=None) -> dict:
                       f"  {time.time()-t_start:6.1f}s", flush=True)
             if (args.checkpoint_every and args.checkpoint_dir
                     and (i + 1) % args.checkpoint_every == 0):
-                store.save_state(args.checkpoint_dir, storage, step=i + 1,
-                                 meta={"arch": args.arch, "loss": loss})
+                bundle = {"params": storage, "mu": opt["mu"],
+                          "nu": opt["nu"], "opt_step": opt["step"]}
+                store.save_checkpoint(
+                    args.checkpoint_dir, bundle, step=i + 1,
+                    meta={"arch": args.arch, "loss": loss,
+                          "layout": layout_meta,
+                          "moment_dtype": opt_cfg.moment_dtype},
+                    keep=args.keep_checkpoints)
 
         # ---- segmented profiling pass: measured tick timeline + drift ----
         if exec_table is not None and (args.trace or args.drift_report):

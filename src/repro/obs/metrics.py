@@ -111,6 +111,22 @@ class Registry:
         return out
 
 
+def resilience_registry() -> Registry:
+    """The resilience layer's metric names (repro/resilience/supervisor.py):
+    restart/shrink/anomaly counters, a lost-steps gauge-per-event folded as
+    a counter total, and the recovery-time span in seconds (gauge: last
+    recovery; the JSONL events carry every span).  Declared here so the
+    telemetry surface is one registry away from dashboards, like the
+    training metrics."""
+    reg = Registry()
+    reg.counter("restarts")
+    reg.counter("lost_steps")
+    reg.counter("skipped_steps")
+    reg.counter("shrinks")
+    reg.gauge("recovery_time_s")
+    return reg
+
+
 # ---------------------------------------------------------------------------
 # Derived estimates
 # ---------------------------------------------------------------------------

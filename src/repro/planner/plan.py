@@ -73,6 +73,37 @@ def execution_of(doc: dict) -> dict:
                      "generate an execution plan with --smoke)")
 
 
+def shrink_execution(ex: dict, *, data: int) -> dict:
+    """Re-validate an execution section for a mesh shrunk along `data`.
+
+    The supervisor's failure-shrink path calls this before resharding:
+    dropping a data-axis replica changes the per-device batch shard, so the
+    surviving mesh must still divide the plan's batch — and the schedule's
+    tick table stays valid (it never depends on the data extent).  Returns
+    a copy of ``ex`` with the new mesh; raises ``ValueError`` with the
+    offending arithmetic when the shrunk mesh cannot run the plan."""
+    if data < 1:
+        raise ValueError(f"shrunk data extent must be >= 1, got {data}")
+    old_d, model = (int(v) for v in ex.get("mesh", "1x1").split("x"))
+    if data > old_d:
+        raise ValueError(f"shrink cannot grow the data axis: {old_d} -> {data}")
+    gb, mb = ex.get("global_batch", 1), ex.get("microbatches", 1)
+    if gb % mb:
+        raise ValueError(f"plan batch {gb} not divisible by "
+                         f"microbatches {mb}")
+    if (gb // mb) % data:
+        raise ValueError(
+            f"cannot shrink to data={data}: per-microbatch batch "
+            f"{gb}//{mb} = {gb // mb} is not divisible by the surviving "
+            f"data extent (pick a batch with more factors, or shrink to a "
+            f"divisor)")
+    if ex.get("partitioned") and ex.get("stages", 1) > 1 and data < 1:
+        raise ValueError("partitioned pipeline storage needs data >= 1")
+    out = dict(ex)
+    out["mesh"] = f"{data}x{model}"
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Executable smoke plans (registry archs, local device counts)
 # ---------------------------------------------------------------------------

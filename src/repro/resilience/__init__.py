@@ -1,0 +1,21 @@
+"""Fault-tolerant elastic training (paper §8.2–8.3).
+
+Three modules redeem the checkpoint store's elasticity promise:
+
+  reshard.py     restore a checkpoint saved on one stage x data x model
+                 mesh onto a *different* mesh — pure-host layout conversion
+                 through the full-layout tree (core/partition.py +
+                 core/pipeline.py stage stacks), bit-identical for fp32
+                 state.
+  faults.py      deterministic fault plans as data: crash-at-step-k,
+                 NaN/inf gradient, corrupted/torn checkpoint file, lost
+                 data replica — the injection harness CI's resilience
+                 smoke and the recovery tests drive.
+  supervisor.py  a supervising train loop: auto-resume from the latest
+                 *valid* checkpoint (checksummed, bounded rollback on
+                 corruption), anomalous-step rollback (non-finite loss /
+                 grad-norm spike), and failure-shrink — drop a data-axis
+                 replica mid-run, reshard state onto the smaller mesh,
+                 revalidate the plan, continue.
+"""
+from repro.resilience import faults, reshard, supervisor  # noqa: F401

@@ -1,0 +1,266 @@
+"""Checkpoint resharding: restore state saved on mesh A onto mesh B (§8.3).
+
+The streaming checkpoint (checkpointing/store.py) saves whatever layout the
+run trained in:
+
+  * pipelined + partitioned:  layer leaves ``[S, K, n_model, n_data, chunk]``
+    fp32 ZeRO chunk stacks (core/pipeline.py), outer leaves full fp32;
+  * pipelined + replicated:   layer leaves ``[S, K, ...]`` stage stacks;
+  * flat + partitioned:       every leaf ``[L?, n_model, n_data, chunk]``
+    fp32 chunks (core/partition.py);
+  * flat + replicated:        the full compute layout.
+
+Elastic restore re-chunks between any two of those layouts by round-tripping
+through the FULL-layout tree: ``to_full_state`` inverts the source layout on
+the host (numpy/CPU — no mesh needed), ``from_full_state`` applies the
+destination layout via the same ``to_partitioned_stage_stack`` /
+``host_partition_leaf`` code paths the trainers themselves use, so
+save(mesh A) -> reshard -> load(mesh B) is bit-identical to saving directly
+on mesh B (property-tested over (S, n_data, n_model) grids).  Every
+conversion is reshape/pad/moveaxis — values move, they are never
+recomputed; dtypes are preserved (fp32 widening on the way in is undone on
+the way out for sub-fp32 moment trees).
+
+``MeshLayout`` is the serialized identity of a layout; the supervisor
+records it in every checkpoint manifest's ``meta["layout"]`` and reshards
+on restore when it differs from the live mesh (failure-shrink, elastic
+resize, and the train -> serve weight hot-swap all ride this one path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as zp
+from repro.core.schedules import PipeSpec
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+
+class ReshardError(RuntimeError):
+    """A layout conversion is infeasible (indivisible shapes, bad meta)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshLayout:
+    """The mesh + storage layout a training state is chunked for.
+
+    ``schedule``/``n_microbatches`` matter only when ``stages > 1`` — the
+    tick-table chunk placement (global chunk g = v*S + s) depends on the
+    schedule's chunk count V, so the same ``[S, K, ...]`` stack means
+    different layers under modular vs naive."""
+    stages: int = 1
+    data: int = 1
+    model: int = 1
+    partitioned: bool = True
+    schedule: str = "modular"
+    n_microbatches: int = 1
+
+    def __post_init__(self):
+        for f in ("stages", "data", "model"):
+            if getattr(self, f) < 1:
+                raise ReshardError(f"MeshLayout.{f} must be >= 1, got "
+                                   f"{getattr(self, f)}")
+
+    @property
+    def devices(self) -> int:
+        return self.stages * self.data * self.model
+
+    def to_meta(self) -> dict:
+        return {"stages": self.stages, "data": self.data, "model": self.model,
+                "partitioned": self.partitioned, "schedule": self.schedule,
+                "n_microbatches": self.n_microbatches}
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "MeshLayout":
+        try:
+            return cls(**{k: meta[k] for k in
+                          ("stages", "data", "model", "partitioned",
+                           "schedule", "n_microbatches")})
+        except KeyError as e:
+            raise ReshardError(
+                f"checkpoint layout meta is missing key {e.args[0]!r}: "
+                f"{meta}") from e
+
+    def pipe_spec(self, cfg: ModelConfig) -> PipeSpec:
+        if cfg.num_layers % self.stages:
+            raise ReshardError(
+                f"stages={self.stages} does not divide "
+                f"num_layers={cfg.num_layers} for {cfg.name}")
+        try:
+            return PipeSpec(n_stages=self.stages,
+                            layers_per_stage=cfg.num_layers // self.stages,
+                            n_microbatches=self.n_microbatches,
+                            schedule=self.schedule)
+        except AssertionError as e:
+            raise ReshardError(f"infeasible pipeline shape for layout "
+                               f"{self}: {e}") from e
+
+
+def _full_template(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _layer_template(cfg: ModelConfig) -> PyTree:
+    tmpl = _full_template(cfg)
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                        tmpl["layers"])
+
+
+# ---------------------------------------------------------------------------
+# Templates: the ShapeDtypeStructs of a layout's storage (host-only, cheap)
+# ---------------------------------------------------------------------------
+def storage_template(cfg: ModelConfig, layout: MeshLayout) -> PyTree:
+    """ShapeDtypeStruct tree of the training-state storage for ``layout`` —
+    the ``like`` argument for ``store.load_state`` on that layout."""
+    full = _full_template(cfg)
+    if layout.stages > 1:
+        from repro.core import pipeline as pp
+        spec = layout.pipe_spec(cfg)
+        outer = {k: v for k, v in full.items() if k != "layers"}
+        if layout.partitioned:
+            outer = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), outer)
+            lspecs = T.layer_specs(cfg, layout.model)
+            layers = jax.eval_shape(
+                lambda l: pp.to_partitioned_stage_stack(
+                    l, spec, layout.data, lspecs=lspecs, tp=layout.model),
+                full["layers"])
+        else:
+            layers = jax.eval_shape(lambda l: pp.to_stage_stack(l, spec),
+                                    full["layers"])
+        return dict(outer, layers=layers)
+    if layout.partitioned:
+        return zp.partitioned_shapes(full, T.param_specs(cfg, layout.model),
+                                     layout.data, layout.model)
+    return full
+
+
+# ---------------------------------------------------------------------------
+# Layout <-> full-layout tree (pure host)
+# ---------------------------------------------------------------------------
+def to_full_state(storage: PyTree, cfg: ModelConfig,
+                  layout: MeshLayout) -> PyTree:
+    """Storage in ``layout`` -> the full-layout tree (host numpy arrays).
+
+    Partitioned layouts come back as fp32 (their storage dtype); replicated
+    layouts keep their dtypes.  Pure data movement — bit-identical."""
+    storage = jax.tree.map(np.asarray, storage)
+    if layout.stages > 1:
+        from repro.core import pipeline as pp
+        spec = layout.pipe_spec(cfg)
+        outer = {k: v for k, v in storage.items() if k != "layers"}
+        if layout.partitioned:
+            layers = pp.from_partitioned_stage_stack(
+                storage["layers"], spec, _layer_template(cfg),
+                lspecs=T.layer_specs(cfg, layout.model), tp=layout.model)
+        else:
+            layers = pp.from_stage_stack(storage["layers"], spec)
+        return dict(jax.tree.map(np.asarray, outer),
+                    layers=jax.tree.map(np.asarray, layers))
+    if not layout.partitioned:
+        return storage
+    full = _full_template(cfg)
+    fspecs = T.param_specs(cfg, layout.model)
+
+    def conv(path, chunks, tmpl, sp):
+        return zp.host_unpartition_leaf(
+            chunks, tuple(tmpl.shape), sp, layout.model,
+            stacked=zp.is_stacked_path(path))
+
+    return jax.tree_util.tree_map_with_path(conv, storage, full, fspecs)
+
+
+def from_full_state(full: PyTree, cfg: ModelConfig,
+                    layout: MeshLayout) -> PyTree:
+    """Full-layout tree -> storage in ``layout`` (host numpy arrays).
+
+    Partitioned layouts widen to fp32 (exact); replicated layouts cast to
+    the template dtype (lossy below fp32 — callers restoring sub-fp32
+    moment trees re-cast via ``reshard_state``'s dtype preservation)."""
+    full = jax.tree.map(np.asarray, full)
+    tmpl = _full_template(cfg)
+    if layout.stages > 1:
+        from repro.core import pipeline as pp
+        spec = layout.pipe_spec(cfg)
+        outer = {k: v for k, v in full.items() if k != "layers"}
+        if layout.partitioned:
+            outer = jax.tree.map(lambda x: np.asarray(x, np.float32), outer)
+            layers = pp.to_partitioned_stage_stack(
+                full["layers"], spec, layout.data,
+                lspecs=T.layer_specs(cfg, layout.model), tp=layout.model)
+        else:
+            outer = jax.tree.map(
+                lambda x, t: np.asarray(x, t.dtype), outer,
+                {k: v for k, v in tmpl.items() if k != "layers"})
+            layers = pp.to_stage_stack(
+                jax.tree.map(lambda x, t: np.asarray(x, t.dtype),
+                             full["layers"], tmpl["layers"]), spec)
+        return dict(outer, layers=jax.tree.map(np.asarray, layers))
+    if not layout.partitioned:
+        return jax.tree.map(lambda x, t: np.asarray(x, t.dtype), full, tmpl)
+    fspecs = T.param_specs(cfg, layout.model)
+
+    def conv(path, x, sp):
+        return zp.host_partition_leaf(x, sp, layout.model, layout.data,
+                                      stacked=zp.is_stacked_path(path))
+
+    return jax.tree_util.tree_map_with_path(conv, full, fspecs)
+
+
+def reshard_state(storage: PyTree, cfg: ModelConfig, src: MeshLayout,
+                  dst: MeshLayout) -> PyTree:
+    """Storage saved on ``src`` -> storage for ``dst`` (host, bit-exact for
+    fp32 state; sub-fp32 leaves keep their dtype — the fp32 round-trip
+    through the full tree is exact widening and is undone on the way out)."""
+    if src == dst:
+        return jax.tree.map(np.asarray, storage)
+    out = from_full_state(to_full_state(storage, cfg, src), cfg, dst)
+    if _tree_structures_match(storage, out):
+        # dtype preservation for trees whose storage dtype differs from the
+        # canonical one (e.g. bf16 Adam moments in a partitioned layout)
+        out = jax.tree.map(lambda o, s: np.asarray(o, np.asarray(s).dtype)
+                           if o.dtype != np.asarray(s).dtype else o,
+                           out, storage)
+    return out
+
+
+def _tree_structures_match(a: PyTree, b: PyTree) -> bool:
+    return (jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b))
+
+
+# ---------------------------------------------------------------------------
+# Train-state bundles (params + Adam moments), the supervisor's unit
+# ---------------------------------------------------------------------------
+def bundle_template(cfg: ModelConfig, layout: MeshLayout, *,
+                    moment_dtype="float32") -> PyTree:
+    """Template for the checkpoint bundle the supervisor saves: parameters
+    AND optimizer state, so a resumed trajectory is exact (restoring only
+    params silently resets Adam's moments — the old resume bug)."""
+    st = storage_template(cfg, layout)
+    mom = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.dtype(moment_dtype)), st)
+    return {"params": st, "mu": mom, "nu": mom,
+            "opt_step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def reshard_bundle(bundle: PyTree, cfg: ModelConfig, src: MeshLayout,
+                   dst: MeshLayout) -> PyTree:
+    """Reshard a params+moments checkpoint bundle; moments share the
+    parameter layout (the optimizer is element-wise over chunks), the step
+    scalar passes through."""
+    out = {k: reshard_state(bundle[k], cfg, src, dst)
+           for k in ("params", "mu", "nu")}
+    out["opt_step"] = np.asarray(bundle["opt_step"])
+    return out
+
+
+def moment_dtype_of(bundle: PyTree) -> str:
+    leaf = jax.tree_util.tree_leaves(bundle["mu"])[0]
+    return str(np.asarray(leaf).dtype)

@@ -1,0 +1,361 @@
+"""Supervising train loop: auto-resume, anomaly rollback, failure-shrink.
+
+The paper's §8.2 argument is that streaming checkpoints bound the loss from
+a crash to a single batch; this module is the loop that cashes that bound
+in.  It wraps the repo's train steps (flat or pipelined, replicated or
+ZeRO-partitioned) with:
+
+  * **auto-resume** — every checkpoint is a params+Adam-moments bundle in a
+    step-scoped, checksummed directory; on a (real or injected) crash the
+    supervisor restores the newest checkpoint that verifies, falling back
+    over corrupt ones (bounded by ``max_rollback``), with bounded
+    exponential-backoff retries.  Replayed steps are deterministic (the
+    synthetic data is step-keyed), so a resumed trajectory is *exactly*
+    the unkilled one.
+  * **anomaly gating** — a step whose loss/grad-norm is non-finite, or
+    whose grad-norm spikes beyond ``anomaly_factor`` x the running median,
+    is rolled back: the pre-step state is kept and the batch is skipped.
+  * **failure-shrink** — on a lost data replica the surviving mesh is
+    rebuilt with ``data - 1``, the in-memory state is resharded through
+    ``resilience.reshard`` (bit-exact), the plan's execution section is
+    revalidated against the shrunk mesh (planner.plan.shrink_execution),
+    and training continues without losing a step.
+
+Faults are injected deterministically from a ``faults.FaultPlan``; the same
+code paths serve real failures (a genuine non-finite loss takes the same
+gate as an injected one).  Telemetry flows through ``obs``: restart /
+lost-steps / shrink counters and the recovery-time span
+(``obs.metrics.resilience_registry``), JSONL events on the run's
+``MetricsSink``, and tracer spans around every recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing import store
+from repro.core import stepfn
+from repro.core.accumulation import AccumConfig
+from repro.data.synthetic import DataConfig, batch_for
+from repro.launch.mesh import make_train_mesh
+from repro.models.common import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.optim.adam import AdamConfig, adam_init
+from repro.resilience import faults as flt
+from repro.resilience import reshard
+from repro.resilience.reshard import MeshLayout
+
+PyTree = Any
+
+
+class SupervisorError(RuntimeError):
+    """Unrecoverable supervision failure (retries exhausted, bad shrink)."""
+
+
+# (cfg, opt_cfg, layout, method) -> (mesh, jitted step).  Step functions are
+# stateless, so restarted / shrunk / repeated supervisors on the same layout
+# reuse one compilation instead of re-tracing — recovery time is dominated by
+# the checkpoint read, not by XLA.
+_STEP_CACHE: dict[tuple, tuple] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    max_restarts: int = 3        # bounded retries before giving up
+    backoff_s: float = 0.0       # base of the exponential restart backoff
+    checkpoint_every: int = 1    # steps between checkpoint saves
+    keep_checkpoints: int = 3    # GC: newest N valid checkpoints survive
+    max_rollback: int = 4        # corrupt checkpoints to fall back over
+    anomaly_factor: float = 20.0  # grad-spike gate (0 disables); non-finite
+    anomaly_window: int = 8       # loss/grad-norm is always gated
+    seed: int = 0
+
+
+class Supervisor:
+    """Owns the (mesh, step_fn, state) triple and survives its failures.
+
+    ``layout`` names the live mesh and storage layout; ``method`` picks the
+    accumulation schedule for flat (stages == 1) meshes.  ``plan_execution``
+    (a plan document's execution dict) is revalidated on every shrink.
+    """
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamConfig,
+                 data_cfg: DataConfig, layout: MeshLayout, *,
+                 ckpt_root: str, method: str = "layered",
+                 sup: SupervisorConfig = SupervisorConfig(),
+                 fault_plan: flt.FaultPlan | None = None,
+                 sink: obs_metrics.MetricsSink | None = None,
+                 tracer=None, plan_execution: dict | None = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.layout = layout
+        self.method = method
+        self.ckpt_root = ckpt_root
+        self.sup = sup
+        self.faults = fault_plan
+        self.sink = sink or obs_metrics.MetricsSink(None)
+        self.tracer = tracer
+        self.plan_execution = plan_execution
+        self.reg = obs_metrics.resilience_registry()
+        self.mtree = self.reg.init()
+        self.restarts = 0
+        self.history: list[dict] = []
+        self._gnorms: list[float] = []
+        self.mesh = None
+        self.step_fn = None
+        self.storage = None
+        self.opt = None
+
+    # -- build / state ----------------------------------------------------
+    def _span(self, name, **kw):
+        import contextlib
+        return (self.tracer.span(name, **kw) if self.tracer is not None
+                else contextlib.nullcontext())
+
+    def _build(self) -> None:
+        """(Re)build mesh + jitted step for the current layout (cached)."""
+        lay = self.layout
+        key = (self.cfg, self.opt_cfg, lay, self.method)
+        if key in _STEP_CACHE:
+            self.mesh, self.step_fn = _STEP_CACHE[key]
+            return
+        self.mesh = make_train_mesh(stages=lay.stages, data=lay.data,
+                                    model=lay.model)
+        if lay.stages > 1:
+            spec = lay.pipe_spec(self.cfg)
+            self.step_fn = stepfn.build_pipeline_train_step(
+                self.cfg, self.mesh, spec, self.opt_cfg,
+                partitioned=lay.partitioned, donate=False)
+        else:
+            acc = AccumConfig(method=self.method, partitioned=lay.partitioned,
+                              n_microbatches=lay.n_microbatches)
+            self.step_fn = stepfn.build_train_step(
+                self.cfg, self.mesh, acc, self.opt_cfg, donate=False)
+        _STEP_CACHE[key] = (self.mesh, self.step_fn)
+
+    def _fresh_state(self) -> tuple[PyTree, PyTree]:
+        lay = self.layout
+        key = jax.random.PRNGKey(self.sup.seed)
+        if lay.stages > 1:
+            storage = stepfn.init_pipeline_storage(
+                self.cfg, self.mesh, key, lay.pipe_spec(self.cfg),
+                partitioned=lay.partitioned)
+        else:
+            storage = stepfn.init_storage(self.cfg, self.mesh, key,
+                                          partitioned=lay.partitioned)
+        return storage, adam_init(storage,
+                                  moment_dtype=self.opt_cfg.moment_dtype)
+
+    def _bundle(self, storage: PyTree, opt: PyTree) -> PyTree:
+        return {"params": storage, "mu": opt["mu"], "nu": opt["nu"],
+                "opt_step": opt["step"]}
+
+    def _unbundle(self, bundle: PyTree) -> tuple[PyTree, PyTree]:
+        asdev = lambda t: jax.tree.map(jnp.asarray, t)   # noqa: E731
+        storage = asdev(bundle["params"])
+        opt = {"mu": asdev(bundle["mu"]), "nu": asdev(bundle["nu"]),
+               "step": jnp.asarray(bundle["opt_step"], jnp.int32)}
+        return storage, opt
+
+    def _save(self, storage: PyTree, opt: PyTree, *, step: int) -> str:
+        meta = {"layout": self.layout.to_meta(), "arch": self.cfg.name,
+                "moment_dtype": self.opt_cfg.moment_dtype}
+        return store.save_checkpoint(
+            self.ckpt_root, self._bundle(storage, opt), step=step, meta=meta,
+            keep=self.sup.keep_checkpoints)
+
+    def _restore(self) -> tuple[PyTree, PyTree, int] | None:
+        """Newest valid checkpoint -> (storage, opt, step); reshards when
+        the saved layout differs from the live one.  None when nothing
+        restorable exists (fresh start)."""
+        for step, d, manifest in store.restorable(
+                self.ckpt_root, max_rollback=self.sup.max_rollback):
+            meta = manifest.get("meta", {})
+            saved = (MeshLayout.from_meta(meta["layout"])
+                     if "layout" in meta else self.layout)
+            like = reshard.bundle_template(
+                self.cfg, saved,
+                moment_dtype=meta.get("moment_dtype",
+                                      self.opt_cfg.moment_dtype))
+            try:
+                bundle, s = store.load_state(d, like)
+            except store.CheckpointError as e:
+                self.sink.log(event="restore_rejected",
+                              record={"dir": d, "error": str(e)})
+                continue
+            if saved != self.layout:
+                bundle = reshard.reshard_bundle(bundle, self.cfg, saved,
+                                                self.layout)
+            storage, opt = self._unbundle(bundle)
+            return storage, opt, s
+        return None
+
+    def _restore_or_init(self) -> tuple[PyTree, PyTree, int]:
+        got = self._restore()
+        if got is not None:
+            return got
+        storage, opt = self._fresh_state()
+        return storage, opt, 0
+
+    # -- recovery actions -------------------------------------------------
+    def _handle_crash(self, at_step: int) -> tuple[PyTree, PyTree, int]:
+        self.restarts += 1
+        if self.restarts > self.sup.max_restarts:
+            raise SupervisorError(
+                f"giving up after {self.sup.max_restarts} restarts "
+                f"(crash before step {at_step})")
+        if self.sup.backoff_s > 0:
+            time.sleep(self.sup.backoff_s * (2 ** (self.restarts - 1)))
+        t0 = time.perf_counter()
+        with self._span("recovery", cat="resilience", step=at_step):
+            storage, opt, resume = self._restore_or_init()
+        rec_s = time.perf_counter() - t0
+        lost = max(0, at_step - resume)
+        self.mtree = self.reg.update(self.mtree, restarts=1, lost_steps=lost,
+                                     recovery_time_s=rec_s)
+        self.sink.log(event="restart",
+                      record={"crash_step": at_step, "resume_step": resume,
+                              "lost_steps": lost, "recovery_time_s": rec_s,
+                              "restarts": self.restarts})
+        return storage, opt, resume
+
+    def _shrink(self, storage: PyTree, opt: PyTree,
+                at_step: int) -> tuple[PyTree, PyTree]:
+        old = self.layout
+        if old.data <= 1:
+            raise SupervisorError(
+                f"cannot shrink below one data replica (step {at_step})")
+        new = dataclasses.replace(old, data=old.data - 1)
+        if self.plan_execution is not None:
+            # the plan must still be valid on the surviving mesh — fail
+            # loudly *before* resharding if it is not
+            from repro.planner import plan as planlib
+            try:
+                self.plan_execution = planlib.shrink_execution(
+                    self.plan_execution, data=new.data)
+            except ValueError as e:
+                raise SupervisorError(
+                    f"failure-shrink to data={new.data} rejected by the "
+                    f"plan: {e}") from e
+        t0 = time.perf_counter()
+        with self._span("shrink", cat="resilience", step=at_step):
+            bundle = reshard.reshard_bundle(self._bundle(storage, opt),
+                                            self.cfg, old, new)
+            self.layout = new
+            self._build()
+            storage, opt = self._unbundle(bundle)
+        rec_s = time.perf_counter() - t0
+        self.mtree = self.reg.update(self.mtree, shrinks=1,
+                                     recovery_time_s=rec_s)
+        self.sink.log(event="shrink",
+                      record={"step": at_step, "data_from": old.data,
+                              "data_to": new.data, "recovery_time_s": rec_s})
+        return storage, opt
+
+    def _anomalous(self, loss: float, gnorm: float) -> str | None:
+        if not (math.isfinite(loss) and math.isfinite(gnorm)):
+            return f"non-finite step (loss={loss}, grad_norm={gnorm})"
+        window = self._gnorms[-self.sup.anomaly_window:]
+        if (self.sup.anomaly_factor > 0 and len(window) >= 3
+                and gnorm > self.sup.anomaly_factor
+                * statistics.median(window)):
+            return (f"grad-norm spike {gnorm:.3g} > "
+                    f"{self.sup.anomaly_factor:g} x running median "
+                    f"{statistics.median(window):.3g}")
+        return None
+
+    # -- the loop ---------------------------------------------------------
+    def run(self, steps: int) -> dict:
+        """Supervised training to ``steps`` total completed steps.
+
+        Returns a result dict (history, restart/shrink/skip counters, the
+        final layout) and leaves the final state on ``self.storage`` /
+        ``self.opt`` for callers that keep training or hot-swap weights."""
+        sup = self.sup
+        with self._span("build_step"):
+            self._build()
+        storage, opt, i = self._restore_or_init()
+        if i:
+            self.sink.log(event="resume", record={"resume_step": i})
+        while i < steps:
+            try:
+                for f in tuple(self.faults.pending_at(i)) if self.faults else ():
+                    if f.kind == "crash":
+                        self.faults.fire(f)
+                        raise flt.InjectedCrash(i)
+                    if f.kind == "lose_replica":
+                        self.faults.fire(f)
+                        storage, opt = self._shrink(storage, opt, i)
+                batch = batch_for(self.cfg, self.data_cfg, i)
+                t0 = time.perf_counter()
+                new_storage, new_opt, m = self.step_fn(storage, opt, batch)
+                loss = float(m["loss"])             # device sync
+                gnorm = float(m["grad_norm"])
+                dt = time.perf_counter() - t0
+                for f in tuple(self.faults.pending_at(i)) if self.faults else ():
+                    if f.kind == "nan_grad":
+                        self.faults.fire(f)
+                        loss, gnorm = float("nan"), float("inf")
+                    elif f.kind == "grad_spike":
+                        self.faults.fire(f)
+                        gnorm *= f.scale
+                why = self._anomalous(loss, gnorm)
+                if why is not None:
+                    # roll back: pre-step state is kept, the batch skipped
+                    self.mtree = self.reg.update(self.mtree, skipped_steps=1)
+                    self.sink.log(event="anomaly",
+                                  record={"step": i, "loss": loss,
+                                          "grad_norm": gnorm, "reason": why})
+                    i += 1
+                    continue
+                storage, opt = new_storage, new_opt
+                self._gnorms.append(gnorm)
+                rec = {"step": i, "loss": loss, "grad_norm": gnorm,
+                       "lr": float(m["lr"]), "step_time_s": dt}
+                self.history.append(rec)
+                self.sink.log(rec)
+                if (i + 1) % sup.checkpoint_every == 0:
+                    self._save(storage, opt, step=i + 1)
+                for f in tuple(self.faults.pending_at(i)) if self.faults else ():
+                    if f.kind == "corrupt_checkpoint":
+                        self.faults.fire(f)
+                        ckpts = store.checkpoint_steps(self.ckpt_root)
+                        if ckpts:
+                            path = flt.corrupt_checkpoint_file(
+                                ckpts[-1][1], file_index=f.file_index,
+                                byte_offset=f.byte_offset)
+                            self.sink.log(event="injected_corruption",
+                                          record={"step": i, "file": path})
+                i += 1
+            except flt.InjectedCrash as e:
+                storage, opt, i = self._handle_crash(e.step)
+        self.storage, self.opt = storage, opt
+        host = self.reg.to_host(self.mtree)
+        result = {
+            "steps": steps,
+            "history": self.history,
+            "final_layout": self.layout.to_meta(),
+            "restarts": int(host["restarts"]),
+            "lost_steps": int(host["lost_steps"]),
+            "skipped_steps": int(host["skipped_steps"]),
+            "shrinks": int(host["shrinks"]),
+            "recovery_time_s": host["recovery_time_s"],
+        }
+        if self.history:
+            result["first_loss"] = self.history[0]["loss"]
+            result["last_loss"] = self.history[-1]["loss"]
+        return result
+
+    def history_by_step(self) -> dict[int, dict]:
+        """Last record per step index (replayed steps overwrite)."""
+        out: dict[int, dict] = {}
+        for rec in self.history:
+            out[rec["step"]] = rec
+        return out

@@ -36,3 +36,37 @@ def test_atomic_overwrite(tmp_path):
     loaded, step = store.load_state(str(tmp_path), state)
     assert step == 2
     np.testing.assert_allclose(np.asarray(loaded["w"]), 1.0)
+
+
+def test_manifest_records_per_file_checksums(tmp_path):
+    state = {"w": jnp.ones((4,)), "layers": {"k": jnp.zeros((2, 3))}}
+    store.save_state(str(tmp_path), state, step=1)
+    manifest = store.load_manifest(str(tmp_path))
+    # one checksum per written file: w.npy + layers__k.L{0,1}.npy
+    assert sorted(manifest["files"]) == ["layers__k.L0.npy",
+                                        "layers__k.L1.npy", "w.npy"]
+    assert all(len(h) == 64 for h in manifest["files"].values())
+    assert store.verify_files(str(tmp_path)) == []
+
+
+def test_step_scoped_dirs_and_templates(tmp_path):
+    state = {"w": jnp.arange(4.0)}
+    d = store.save_checkpoint(str(tmp_path), state, step=3)
+    assert d.endswith("step_00000003")
+    assert store.checkpoint_steps(str(tmp_path)) == [(3, d)]
+    # ShapeDtypeStruct templates load without materialized arrays
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    loaded, step = store.load_state(d, like)
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(loaded["w"]), np.arange(4.0))
+
+
+def test_load_state_shape_mismatch_is_legible(tmp_path):
+    store.save_state(str(tmp_path), {"w": jnp.zeros((4,))}, step=1)
+    with np.testing.assert_raises(store.CheckpointError):
+        store.load_state(str(tmp_path), {"w": jnp.zeros((5,))})
+    try:
+        store.load_state(str(tmp_path), {"w": jnp.zeros((5,))})
+    except store.CheckpointError as e:
+        msg = str(e)
+        assert "(4,)" in msg and "(5,)" in msg and "'w'" in msg, msg

@@ -31,6 +31,8 @@ import pathlib
 import sys
 
 # metric -> "higher" | "lower" (which direction is better) | "exact"
+#        | "warn" (never fails: any change is reported as a warning —
+#          for accounting metrics whose drift is informative, not a bug)
 KEY_METRICS: dict[str, dict[str, str]] = {
     "BENCH_planner": {
         # simulator-vs-roofline split agreement: the planner's core claim
@@ -57,6 +59,14 @@ KEY_METRICS: dict[str, dict[str, str]] = {
         # ZeRO-partitioned step time relative to replicated (same-run ratio)
         "partitioned_over_replicated_step": "lower",
     },
+    "BENCH_resilience": {
+        # killed-and-resumed trajectory must match the clean run
+        "auto_resume_ok": "exact",
+        "parity_max_abs_diff": "lower",
+        # recovery accounting: drift is a schedule/config change worth
+        # seeing in CI output, never a gate failure
+        "recovery_steps_lost": "warn",
+    },
 }
 
 
@@ -78,6 +88,11 @@ def compare_suite(name: str, base: dict, fresh: dict,
             continue
         if not isinstance(bval, (int, float)) \
                 or not isinstance(fval, (int, float)):
+            continue
+        if direction == "warn":
+            if bval != fval:
+                warns.append(f"{name}: {metric} {bval} -> {fval} "
+                             f"[warn-only metric]")
             continue
         if bval == 0:
             continue
