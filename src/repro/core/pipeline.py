@@ -28,6 +28,17 @@ shows up verbatim as wasted FLOPs in the roofline, like idle devices waste
 time on real hardware.  ``TickTable.predicted_collectives`` states the
 resulting op counts; the conformance tests pin the lowered jaxpr to them.
 
+Zero-bubble split tables (``build_tick_table(split_backward=True)``) add
+tick kinds 3/4: a BDGRAD tick runs the same joint VJP but keeps only the
+activation-path half — its dx rides the backward ring immediately while the
+weight-path half is deferred — parking the unit's (activation, cotangent)
+residual in a bounded ring buffer (R = ``TickTable.residual_depth()`` slots,
+the table's max outstanding dgrads); the matching BWGRAD tick replays the
+VJP from that residual in a bubble slot and accumulates only the weight-path
+gradient.  Every backward unit therefore lands in the ZeRO chunk grads
+exactly once per pass, so the reduce-scatter frequency and all collective
+counts per tick are unchanged — split tables just have more (cheaper) ticks.
+
 Embedding / head run stage-replicated (their compute is marginal); only
 stage 0's embedding feeds the pipeline, the final output wraps to stage 0
 whose head VJP emits the loss AND the cotangent that rides the loss ring
@@ -212,10 +223,13 @@ def from_partitioned_stage_stack(chunks: PyTree, spec: PipeSpec,
 # ---------------------------------------------------------------------------
 def _table_rows_np(table) -> dict:
     """The tick table as [T, S] numpy arrays (host side: the segmented
-    profiler slices per-tick rows from these)."""
+    profiler slices per-tick rows from these).  ``res_slot`` is the derived
+    residual ring-buffer slot of split tables (all zeros for unsplit)."""
     def arr(rows, dt=np.int32):
         return np.asarray(rows, dtype=dt)
+    res_slot, _ = table.residual_slots()
     return {
+        "res_slot": arr(res_slot),
         "kind": arr(table.kind),
         "v": arr(table.unit_v),
         "mb": arr(table.unit_mb),
@@ -293,6 +307,12 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
     if table is None:
         table = spec.tick_table()
     table.validate_executable()
+    # zero-bubble split tables (kinds 3/4) carry a bounded residual ring
+    # buffer: BDGRAD saves its (activation, cotangent) pair into the slot
+    # the table derived, the matching BWGRAD replays the weight-path dots
+    # from it.  R is the table's max number of outstanding dgrads.
+    split_table = table.is_split
+    res_depth = table.residual_slots()[1] if split_table else 0
     S, M = spec.n_stages, spec.n_microbatches
     V, k_c = table.n_chunks, table.layers_per_chunk
     assert (table.n_stages, table.n_microbatches) == (S, M), \
@@ -437,7 +457,14 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
         dhead = (None if tied
                  else grad_zeros(outer_g["head"], outer_specs["head"]))
         nll_sum = pvary_missing(jnp.zeros((), jnp.float32), vary_axes)
-        return (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum)
+        # split tables: the dgrad->wgrad residual ring buffer, R per-unit
+        # (activation, cotangent) pairs (None keeps unsplit carries as-is)
+        res = None
+        if split_table:
+            res_zeros = pvary_missing(
+                jnp.zeros((res_depth, *X0.shape[1:]), dtype), vary_axes)
+            res = (res_zeros, res_zeros)
+        return (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum, res)
 
     # ---- the tick body ----------------------------------------------------
     def make_tick(ctx, wbuf):
@@ -471,13 +498,27 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
             return nll, dfn_t, dhead_t, demb_t, dxh
 
         def tick(carry, xs):
-            (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+            (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum,
+             res) = carry
             kind = xs["kind"][s]
             v, mb = xs["v"][s], xs["mb"][s]
             is_b = kind == simlib.TICK_B
+            # zero-bubble split halves: BDGRAD is the activation-path
+            # transpose (emits dx, defers the weight dots), BWGRAD replays
+            # the same unit's VJP from the saved residual and keeps only
+            # the weight-path half
+            is_bd = kind == simlib.TICK_BDGRAD
+            is_bw = kind == simlib.TICK_BWGRAD
+            use_w = is_b | is_bw                # weight-path accumulation
+            use_dx = is_b | is_bd               # activation-path cotangent
             g = v * S + s                       # traced global chunk
             x = act_in[v, mb]
             dy = cot[v, mb]
+            if split_table:
+                res_x, res_dy = res
+                slot = xs["res_slot"][s]
+                x = jnp.where(is_bw, res_x[slot], x)
+                dy = jnp.where(is_bw, res_dy[slot], dy)
 
             # one masked chunk VJP: the vjp forward IS the F unit's
             # compute, the pull the B unit's (recompute + transposes)
@@ -502,20 +543,31 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
             y, pull = jax.vjp(chunk_f, w_chunk, shared_g, x)
             dw_v, dsh_t, dx = pull(zp.match_vma(dy, y))
 
-            # accumulate the B unit's chunk gradient at rows [v*k_c, ...)
+            # accumulate the weight-path gradient at rows [v*k_c, ...):
+            # B units in full, BWGRAD units from the replayed residual —
+            # BDGRAD contributes nothing here, so the ZeRO chunk grads
+            # still see each unit exactly once per pass
             def acc_dw(Wl, wv):
                 cur = lax.dynamic_slice_in_dim(Wl, v * k_c, k_c, 0)
-                upd = cur + jnp.where(is_b, wv.astype(jnp.float32), 0.0)
+                upd = cur + jnp.where(use_w, wv.astype(jnp.float32), 0.0)
                 return lax.dynamic_update_slice_in_dim(Wl, upd,
                                                        v * k_c, 0)
             dW = jax.tree.map(acc_dw, dW, dw_v)
             dsh = jax.tree.map(
-                lambda a, b: a + jnp.where(is_b, b.astype(jnp.float32),
+                lambda a, b: a + jnp.where(use_w, b.astype(jnp.float32),
                                            0.0), dsh, dsh_t)
             # backward of global chunk 0 ends the chain: its dx is the
             # embedding cotangent (only ever unmasked on stage 0)
             dX0 = dX0.at[mb].set(
-                jnp.where(is_b & (g == 0), dx.astype(dtype), dX0[mb]))
+                jnp.where(use_dx & (g == 0), dx.astype(dtype), dX0[mb]))
+            # BDGRAD parks this unit's residual in its ring-buffer slot
+            # (the matching BWGRAD tick frees it by replaying from it)
+            if split_table:
+                res_x = res_x.at[slot].set(
+                    jnp.where(is_bd, x, res_x[slot]))
+                res_dy = res_dy.at[slot].set(
+                    jnp.where(is_bd, dy, res_dy[slot]))
+                res = (res_x, res_dy)
 
             # ---- ring 1: forward activation --------------------------
             recv = lax.ppermute(y.astype(dtype), stage_axis, fwd_perm)
@@ -556,7 +608,7 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
                 jnp.where(br_valid, recv_b, cot[br_v, br_mb]))
 
             return (act_in, cot, dX0, dW, dsh, dfn, dhead_new, demb,
-                    nll_sum), None
+                    nll_sum, res), None
         return tick
 
     def epilogue(ctx, carry, params):
@@ -565,7 +617,8 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
         outer_g, batch, n_tok = ctx["outer_g"], ctx["batch"], ctx["n_tok"]
         outer_store = {k: v for k, v in params.items() if k != "layers"}
         on_stage0 = lax.axis_index(stage_axis) == 0
-        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum,
+         _res) = carry
 
         # ---- embed backward (accumulation.py pattern; dX0 is zero off
         # stage 0, so the garbage contributions vanish) ---------------------
@@ -655,7 +708,8 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
                             tree, tmpl)
 
     def pack_state(wbuf, carry, pos, inv_n, n_tok):
-        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum) = carry
+        (act_in, cot, dX0, dW, dsh, dfn, dhead, demb, nll_sum,
+         res) = carry
         st = {"wbuf": wbuf, "act": act_in, "cot": cot, "dX0": dX0, "dW": dW,
               "dsh": _lift(dsh, outer_tmpl.get("shared", {})),
               "dfn": _lift(dfn, outer_tmpl["final_norm"]),
@@ -664,15 +718,19 @@ def _make_tick_grad_fn(cfg: ModelConfig, axis: AxisCtx, spec: PipeSpec,
               "n_tok": n_tok[None]}
         if dhead is not None:
             st["dhead"] = _lift(dhead, outer_tmpl["head"])
+        if res is not None:
+            st["res_x"], st["res_dy"] = res
         return st
 
     def unpack_state(st):
         dhead = (_unlift(st["dhead"], outer_tmpl["head"])
                  if "dhead" in st else None)
+        res = (st["res_x"], st["res_dy"]) if "res_x" in st else None
         carry = (st["act"], st["cot"], st["dX0"], st["dW"],
                  _unlift(st["dsh"], outer_tmpl.get("shared", {})),
                  _unlift(st["dfn"], outer_tmpl["final_norm"]), dhead,
-                 _unlift(st["demb"], outer_tmpl["embed"]), st["nll"][0])
+                 _unlift(st["demb"], outer_tmpl["embed"]), st["nll"][0],
+                 res)
         return (st["wbuf"], carry, st["pos"], st["inv_n"][0], st["n_tok"][0])
 
     # ---- the one-dispatch scan executor (training hot path) ---------------

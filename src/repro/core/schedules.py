@@ -49,6 +49,10 @@ class PipeSpec:
     n_microbatches: int
     schedule: str = "modular"    # modular | naive/gpipe | 1f1b | interleaved
     n_chunks: int = 0            # V (interleaved only; 0 = auto)
+    # zero-bubble backward split: the spec's tick table carries BDGRAD /
+    # BWGRAD halves (wgrad deferred into bubble slots) instead of full B
+    # units; grads/losses are identical, only the schedule shape changes
+    split_backward: bool = False
 
     def __post_init__(self):
         assert self.schedule in KNOWN_SCHEDULES, \
@@ -78,12 +82,15 @@ class PipeSpec:
         return simlib.SimConfig(
             n_stages=self.n_stages, layers_per_stage=self.layers_per_stage,
             n_microbatches=self.n_microbatches, schedule=self.schedule,
-            n_chunks=self.n_chunks if self.schedule == "interleaved" else 0)
+            n_chunks=self.n_chunks if self.schedule == "interleaved" else 0,
+            split_backward=self.split_backward)
 
     def tick_table(self):
-        """The executable tick table for this spec (simulator-emitted)."""
+        """The executable tick table for this spec (simulator-emitted;
+        split when the spec says so)."""
         from repro.planner import simulator as simlib
-        return simlib.build_tick_table(self.sim_config())
+        return simlib.build_tick_table(self.sim_config(),
+                                       split_backward=self.split_backward)
 
     @property
     def layers_per_chunk(self) -> int:

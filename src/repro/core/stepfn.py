@@ -471,6 +471,11 @@ def build_pipeline_tick_profiler(cfg: ModelConfig, mesh: Mesh, spec, *,
     if not cfg.tie_embeddings:
         stspecs["dhead"] = _outer_state_specs(outer_specs["head"],
                                               otmpl["head"])
+    if ex.table.is_split:
+        # zero-bubble split tables carry the dgrad->wgrad residual ring
+        # buffer across the per-tick dispatch boundary
+        stspecs["res_x"] = P(merge)
+        stspecs["res_dy"] = P(merge)
 
     def _init(storage, batch):
         outer_g, shared_g = ex.outer_ctx(storage)

@@ -67,6 +67,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-sims", type=int, default=64)
     ap.add_argument("--max-gpus", type=int, default=100_000,
                     help="prune plans needing more GPUs (0 = unlimited)")
+    ap.add_argument("--split-backward", action="store_true",
+                    help="paper-x mode: also enumerate the zero-bubble "
+                         "split-backward variant of every pipelined "
+                         "candidate (dgrad + deferred wgrad ticks; the "
+                         "simulator gap-fills wgrads into bubble slots). "
+                         "Smoke plans always rank both variants.")
     ap.add_argument("--smoke", action="store_true",
                     help="plan for the reduced (CPU-friendly) config of a "
                          "registry arch; without it the execution plan "
@@ -105,7 +111,8 @@ def main(argv=None) -> dict:
         plans = searchlib.search(x, hw, net=net, grid=args.grid,
                                  simulate_top=args.simulate_top,
                                  max_sims=args.max_sims,
-                                 max_gpus=args.max_gpus or None)
+                                 max_gpus=args.max_gpus or None,
+                                 split_backward=args.split_backward)
         doc = planlib.paper_plan_document(x, plans, net_name=args.net,
                                           top=args.top)
         _print_paper_table(doc)
@@ -131,10 +138,12 @@ def main(argv=None) -> dict:
             else:
                 from repro.planner.simulator import TickTable
                 tab = TickTable.from_json(tt)
+                split = (f" split_backward (residual ring depth "
+                         f"{tab.residual_depth()})" if tab.is_split else "")
                 print(f"tick table: schedule={tab.schedule} "
                       f"S={tab.n_stages} V={tab.n_chunks} "
                       f"k_c={tab.layers_per_chunk} M={tab.n_microbatches} "
-                      f"T={tab.n_ticks}")
+                      f"T={tab.n_ticks}{split}")
                 if args.format == "chrome":
                     _dump_table_chrome(tab, args.table_out
                                        or "tick_table_trace.json")
@@ -158,7 +167,7 @@ def _dump_table_chrome(tab, path: str) -> str:
 
     spec = PipeSpec(tab.n_stages, tab.n_chunks * tab.layers_per_chunk,
                     tab.n_microbatches, tab.schedule,
-                    n_chunks=tab.n_chunks)
+                    n_chunks=tab.n_chunks, split_backward=tab.is_split)
     cost = CostModel(flops_fwd_layer=1.0, flops_bwd_layer=2.0,
                      act_bytes=0.0, layer_param_bytes=0.0,
                      layer_grad_bytes=0.0, flops_rate=1.0,

@@ -67,6 +67,7 @@ def apply_plan(args, argv) -> None:
     take("--steps", "steps", "steps")
     take("--stages", "stages", "stages")
     take("--schedule", "schedule", "schedule")
+    take("--split-backward", "split_backward", "split_backward")
     if "partitioned" in ex and "--no-partition" not in passed:
         args.no_partition = not ex["partitioned"]
     # schedule-as-data: a pipelined plan embeds the tick table it scored;
@@ -152,6 +153,12 @@ def main(argv=None) -> dict:
                          "modular | naive/gpipe | 1f1b | interleaved "
                          "(validated against the executable set, so a plan "
                          "naming an unsupported schedule fails fast)")
+    ap.add_argument("--split-backward", action="store_true",
+                    help="zero-bubble schedule variant (used when --stages "
+                         "> 1): each backward tick splits into a dgrad tick "
+                         "(releases the upstream cotangent) and a deferred "
+                         "wgrad tick scheduled into bubble slots; grads and "
+                         "losses match the unsplit schedule exactly")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", nargs="?", const="latest", default=None,
@@ -242,7 +249,8 @@ def main(argv=None) -> dict:
             spec = PipeSpec(n_stages=args.stages,
                             layers_per_stage=cfg.num_layers // args.stages,
                             n_microbatches=args.microbatches,
-                            schedule=args.schedule)
+                            schedule=args.schedule,
+                            split_backward=args.split_backward)
         except AssertionError as e:
             ap.error(f"infeasible pipeline shape for schedule "
                      f"{args.schedule!r}: {e}")
@@ -256,14 +264,25 @@ def main(argv=None) -> dict:
                     f"M={table.n_microbatches}) does not match the resolved "
                     f"execution (schedule={spec.schedule}, S={spec.n_stages}, "
                     f"M={spec.n_microbatches})")
+            if table.is_split != spec.split_backward:
+                # older plans embed a split table without the execution-level
+                # flag (or vice versa): the table is the contract, follow it
+                import dataclasses
+                spec = dataclasses.replace(spec,
+                                           split_backward=table.is_split)
         exec_table = table if table is not None else spec.tick_table()
         try:
-            with span("build_step"):
-                step = stepfn.build_pipeline_train_step(
-                    cfg, mesh, spec, opt_cfg, partitioned=partitioned,
-                    donate=False, table=exec_table)
-        except NotImplementedError as e:
-            ap.error(str(e))   # non-executable tick kinds (zero-bubble stub)
+            # fail fast, legibly, before tracing: a stale plan JSON with
+            # tick kinds this executor cannot interpret (or a malformed
+            # dgrad/wgrad pairing) names the offending kinds and the
+            # planner flag that produces them
+            exec_table.validate_executable()
+        except (NotImplementedError, ValueError) as e:
+            ap.error(f"plan tick table is not executable: {e}")
+        with span("build_step"):
+            step = stepfn.build_pipeline_train_step(
+                cfg, mesh, spec, opt_cfg, partitioned=partitioned,
+                donate=False, table=exec_table)
         with span("init_storage"):
             storage = stepfn.init_pipeline_storage(
                 cfg, mesh, jax.random.PRNGKey(args.seed), spec,

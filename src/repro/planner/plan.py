@@ -123,11 +123,16 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
 
     ``stage_options`` adds pipelined candidates: each stage count S > 1
     splits the devices into a stage x data x model mesh and ranks every
-    executable schedule (modular / 1f1b / interleaved), priced from its
-    simulator-emitted tick table — T ticks of one masked chunk VJP + head
-    VJP + three ring permutes each, exactly the generic executor's per-tick
-    cost (simulator.predict_spmd_composition).  The winner's ``execution``
-    section carries the ``stages``/``schedule`` fields AND the embedded
+    executable schedule (modular / 1f1b / interleaved), each in unsplit AND
+    zero-bubble split-backward form, priced from its simulator-emitted tick
+    table — T ticks of one masked chunk VJP + head VJP + three ring permutes
+    each, exactly the generic executor's per-tick cost
+    (simulator.predict_spmd_composition).  Split tables run MORE ticks of the
+    same per-tick bundle (each backward unit becomes a dgrad + a wgrad tick),
+    so the formula prices them honestly on this lockstep executor; their
+    wall-clock win lives in the event simulator's overlap accounting, not
+    here.  The winner's ``execution`` section carries the
+    ``stages``/``schedule``/``split_backward`` fields AND the embedded
     ``tick_table`` JSON, so ``launch.train --plan`` interprets the very
     table that was scored (schedule-as-data).
 
@@ -173,33 +178,38 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
                 # (attn out + mlp out, fwd + bwd), payload = one activation
                 tp_s = (4.0 * K * M * 2.0 * ring_m * tc.act_bytes
                         / roofline.ICI_BW)
-                # (schedule, compute_s, p2p_s, table) candidates for this cell
+                # (schedule, split, compute_s, p2p_s, table) candidates
                 cands = []
                 if S == 1:
                     compute_s = (4.0 * K * M * f_dev
                                  + 3.0 * M * head_dev) / roofline.PEAK_FLOPS
-                    cands.append((None, compute_s, 0.0, None))
+                    cands.append((None, False, compute_s, 0.0, None))
                 else:
                     for sched in ("modular", "interleaved", "1f1b"):
-                        try:
-                            spec = PipeSpec(S, K, M, sched)
-                            table = tables.get((S, K, M, sched))
-                            if table is None:
-                                table = spec.tick_table()
-                                tables[(S, K, M, sched)] = table
-                        except (AssertionError, simlib.DeadlockError):
-                            continue    # infeasible shape for this schedule
-                        T_ = table.n_ticks
-                        k_c = table.layers_per_chunk
-                        # the generic executor's per-tick cost: one masked
-                        # chunk VJP + one masked head VJP + 3 ring permutes
-                        # (simulator.predict_spmd_composition)
-                        compute_s = T_ * (3.0 * k_c * f_dev
-                                          + 3.0 * head_dev) \
-                            / roofline.PEAK_FLOPS
-                        p2p_s = 3.0 * T_ * tc.act_bytes / roofline.ICI_BW
-                        cands.append((sched, compute_s, p2p_s, table))
-                for sched, compute_s, p2p_s, table in cands:
+                        for split in (False, True):
+                            try:
+                                spec = PipeSpec(S, K, M, sched,
+                                                split_backward=split)
+                                table = tables.get((S, K, M, sched, split))
+                                if table is None:
+                                    table = spec.tick_table()
+                                    tables[(S, K, M, sched, split)] = table
+                            except (AssertionError, simlib.DeadlockError):
+                                continue    # infeasible for this schedule
+                            T_ = table.n_ticks
+                            k_c = table.layers_per_chunk
+                            # the generic executor's per-tick cost: one masked
+                            # chunk VJP + one masked head VJP + 3 ring
+                            # permutes (simulator.predict_spmd_composition);
+                            # split tables pay the same bundle over more ticks
+                            compute_s = T_ * (3.0 * k_c * f_dev
+                                              + 3.0 * head_dev) \
+                                / roofline.PEAK_FLOPS
+                            p2p_s = (3.0 * T_ * tc.act_bytes
+                                     / roofline.ICI_BW)
+                            cands.append((sched, split, compute_s, p2p_s,
+                                          table))
+                for sched, split, compute_s, p2p_s, table in cands:
                     for method in (("layered",) if S > 1
                                    else ("layered", "standard")):
                         for part in ((False, True) if d > 1 else (False,)):
@@ -231,6 +241,7 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
                                 "mesh": f"{d}x{mdl}",
                                 "stages": S,
                                 "schedule": sched,
+                                "split_backward": split,
                                 "n_ticks": (table.n_ticks if table is not None
                                             else None),
                                 "method": method,
@@ -248,7 +259,8 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
             f"global_batch={global_batch} microbatches={microbatch_options} "
             f"stages={stage_options}")
     rows.sort(key=lambda r: (r["score_step_s"], not r["partitioned"],
-                             sched_rank.get(r["schedule"], 0)))
+                             sched_rank.get(r["schedule"], 0),
+                             r["split_backward"]))
     win = rows[0]
     execution = {
         "arch": arch,
@@ -264,13 +276,15 @@ def smoke_plan_document(arch: str, *, devices: int, global_batch: int = 8,
     if win["stages"] > 1:
         execution["stages"] = win["stages"]
         execution["schedule"] = win["schedule"]
+        execution["split_backward"] = win["split_backward"]
         # schedule-as-data: embed the scored tick table so launch.train
         # interprets exactly what the planner priced (launch.plan
         # --dump-table prints it for inspection)
         spec_k = None
         for key in tables:
             if (key[0] == win["stages"] and key[2] == win["microbatches"]
-                    and key[3] == win["schedule"]):
+                    and key[3] == win["schedule"]
+                    and key[4] == win["split_backward"]):
                 spec_k = key
                 break
         assert spec_k is not None

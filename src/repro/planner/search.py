@@ -43,6 +43,9 @@ class Plan:
     b_mu: int
     n_b: int
     n_chunks: int = 1
+    # zero-bubble backward split: tick table carries dgrad/wgrad halves,
+    # wgrad deferred into bubble slots (simulator prices the exact overlap)
+    split_backward: bool = False
     offload: bool = False
     efficiency: dict = dataclasses.field(default_factory=dict)
     time_s: float = 0.0            # analytic
@@ -61,7 +64,8 @@ class Plan:
     @property
     def family(self) -> str:
         part = "part" if self.partitioned else "repl"
-        return f"{self.schedule}/{self.method}/{part}"
+        sched = self.schedule + ("+zb" if self.split_backward else "")
+        return f"{sched}/{self.method}/{part}"
 
     @property
     def best_time_s(self) -> float:
@@ -84,8 +88,10 @@ class Plan:
         out = {
             "family": self.family, "schedule": self.schedule,
             "method": self.method, "partitioned": self.partitioned,
+            "split_backward": self.split_backward,
             # the generic tick-table executor (core/pipeline.py) can run this
-            # schedule; zero-bubble variants stay analysis-only for now
+            # schedule — including its zero-bubble split-backward variant
+            # (kinds 3/4 execute via the residual ring buffer)
             "executable": simlib.canonical_schedule(self.schedule)
             in simlib.EXECUTABLE_SCHEDULES,
             "offload": self.offload,
@@ -196,7 +202,14 @@ def analytic_eval(m: calc.XModel, hw: calc.Hardware, plan: Plan,
             # simulator prices the exact warmup, this keeps the *estimate*
             # from promoting unsimulatable optimism)
             V = 1
-        eff["bubble"] = V * M / (V * M + S - 1)
+        bub = float(S - 1)
+        if plan.split_backward:
+            # zero-bubble split: the wgrad share of the backward (1/3 of a
+            # 3x-fwd backward = 3/4 of a fwd+bwd tick pair) moves off the
+            # cooldown critical path into bubble slots.  Estimate only —
+            # the event simulator prices the exact gap-filled overlap.
+            bub *= 1.0 - simlib.WGRAD_FRACTION * 0.75
+        eff["bubble"] = V * M / (V * M + bub)
         k_c = K // V
         nu_chunk = (2 + m.n_I) * m.d_m * k_c
         ov_p2p = hw.nu(net) / nu_chunk
@@ -274,6 +287,7 @@ def simulate_plan(m: calc.XModel, hw: calc.Hardware, plan: Plan, net: float,
         schedule=plan.schedule,
         n_chunks=plan.n_chunks if plan.schedule == "interleaved" else 0,
         method=plan.method, partitioned=plan.partitioned, n_data=plan.n_b,
+        split_backward=plan.split_backward,
         overlap_p2p=plan.schedule in ("gpipe", "1f1b"),
         # mirrors stepfn's dispatch: the one-pass chunk kernel serves any
         # partitioned layout; placement (per-chunk §C.3 overlap vs end-of-
@@ -294,7 +308,8 @@ def _divisors(n: int) -> list[int]:
 
 
 def enumerate_plans(m: calc.XModel, hw: calc.Hardware, net: float, *,
-                    grid: str = "full") -> list[Plan]:
+                    grid: str = "full",
+                    split_backward: bool = False) -> list[Plan]:
     if grid == "reduced":
         n_as = [hw.max_node]
         n_ls = [d for d in (1, m.d_l // 32 or 1, m.d_l // 20 or 1, m.d_l)
@@ -323,23 +338,29 @@ def enumerate_plans(m: calc.XModel, hw: calc.Hardware, net: float, *,
                                         method=method, partitioned=partitioned,
                                         n_l=n_l, b_mu=b_mu):
                                     n_b = max(1, int(m.b_c // (n_mu * b_mu)))
-                                    key = (schedule, method, partitioned, n_a,
-                                           n_l, n_mu, b_mu, v)
-                                    if key in seen:
-                                        continue
-                                    seen.add(key)
-                                    plans.append(Plan(
-                                        schedule=schedule, method=method,
-                                        partitioned=partitioned, n_a=n_a,
-                                        n_l=n_l, n_mu=n_mu, b_mu=b_mu,
-                                        n_b=n_b, n_chunks=v))
+                                    splits = ((False, True) if
+                                              (split_backward and n_l > 1)
+                                              else (False,))
+                                    for zb in splits:
+                                        key = (schedule, method, partitioned,
+                                               n_a, n_l, n_mu, b_mu, v, zb)
+                                        if key in seen:
+                                            continue
+                                        seen.add(key)
+                                        plans.append(Plan(
+                                            schedule=schedule, method=method,
+                                            partitioned=partitioned, n_a=n_a,
+                                            n_l=n_l, n_mu=n_mu, b_mu=b_mu,
+                                            n_b=n_b, n_chunks=v,
+                                            split_backward=zb))
     return plans
 
 
 def search(x: int, hw: calc.Hardware | None = None, *,
            net: float | None = None, grid: str = "full",
            simulate_top: int = 12, max_sims: int = 64,
-           max_gpus: int | None = None) -> list[Plan]:
+           max_gpus: int | None = None,
+           split_backward: bool = False) -> list[Plan]:
     """Ranked plans for X_[x].
 
     Analytic prune + rank first; then the simulator re-scores the best
@@ -349,12 +370,20 @@ def search(x: int, hw: calc.Hardware | None = None, *,
     carry simulated times (or ``max_sims`` is spent).  The iteration matters:
     analytic estimates are optimistic for some schedules, so a single pass
     would let never-simulated optimism outrank simulated truth.
+
+    ``split_backward=True`` additionally enumerates the zero-bubble variant
+    of every pipelined candidate (backward split into dgrad + deferred
+    wgrad; the simulator gap-fills the wgrads into per-stage bubbles).
+    Split variants form their own ``<schedule>+zb`` families so the family
+    pass always simulates at least one of each.
     """
     hw = hw or calc.Hardware()
     net = net or hw.ib
     m = calc.XModel(x)
     plans = [p for p in (analytic_eval(m, hw, c, net)
-                         for c in enumerate_plans(m, hw, net, grid=grid))
+                         for c in enumerate_plans(
+                             m, hw, net, grid=grid,
+                             split_backward=split_backward))
              if p is not None]
     if max_gpus is not None:
         plans = [p for p in plans if p.n_gpu <= max_gpus]

@@ -55,13 +55,26 @@ _ALIASES = {"naive": "gpipe"}
 
 # Tick kinds of the executable tick table (core/pipeline.py interprets these;
 # the integer values are part of the plan-JSON contract).  BDGRAD/BWGRAD are
-# the zero-bubble split — emitted by build_tick_table(split_backward=True) as
-# a forward-looking stub, but not yet interpretable (see
-# TickTable.validate_executable and ROADMAP "zero-bubble follow-up").
+# the zero-bubble backward split: a B unit's activation-path transpose
+# (dgrad, releases the upstream cotangent) and its deferred weight-path dots
+# (wgrad, replayed from a saved residual) run as separate ticks, letting
+# ``build_tick_table(split_backward=True)`` park the wgrad halves in what
+# would otherwise be bubble slots.
 TICK_IDLE, TICK_F, TICK_B, TICK_BDGRAD, TICK_BWGRAD = 0, 1, 2, 3, 4
-EXECUTABLE_TICK_KINDS = (TICK_IDLE, TICK_F, TICK_B)
-# every schedule in SCHEDULES lowers to executable tick kinds today
+EXECUTABLE_TICK_KINDS = (TICK_IDLE, TICK_F, TICK_B, TICK_BDGRAD, TICK_BWGRAD)
+# stable human-readable kind names of the shared timeline schema (obs/trace,
+# obs/drift and TickTable.timeline all render these); idle ticks have none.
+TICK_NAMES = {TICK_IDLE: None, TICK_F: "F", TICK_B: "B",
+              TICK_BDGRAD: "Bd", TICK_BWGRAD: "Bw"}
+# every schedule in SCHEDULES lowers to executable tick kinds, split or not
 EXECUTABLE_SCHEDULES = SCHEDULES
+
+# Share of a backward unit's time spent in the deferred weight-path dots.
+# The full backward bundle is recompute + activation-path transposes +
+# weight-path dots (~3x one forward); the wgrad half replays from a saved
+# residual, so it is the weight dots alone — one forward-equivalent of the
+# three.  Used by the event simulator's split-backward mode.
+WGRAD_FRACTION = 1.0 / 3.0
 
 
 def canonical_schedule(name: str) -> str:
@@ -136,6 +149,11 @@ class SimConfig:
     overlap_coll: bool = True
     shared_link: bool = False       # p2p and collectives share one wire
     include_backward: bool = True
+    # zero-bubble backward split: B units run as dgrad (releases the
+    # upstream cotangent after (1 - WGRAD_FRACTION) of the backward time)
+    # with the wgrad half deferred into the stage's idle gaps — the event-
+    # engine counterpart of build_tick_table(split_backward=True).
+    split_backward: bool = False
     # -- serving mode -------------------------------------------------------
     # Models ONE continuous-batching decode step instead of a training step:
     # decode is HBM-bandwidth-bound (every step streams the whole weight
@@ -333,16 +351,103 @@ class TickTable:
         return self.n_chunks * self.n_stages
 
     def validate_executable(self) -> None:
-        """Raise if the table contains tick kinds the generic executor
-        (core/pipeline.py) cannot interpret yet."""
+        """Raise if the table cannot run on the generic executor
+        (core/pipeline.py): unknown tick kinds, or split-backward ticks
+        (kinds 3/4) whose dgrad→wgrad pairing is inconsistent.
+
+        The message names the offending kinds and the planner flag that
+        emits each known one, so a stale or foreign plan JSON (e.g. a table
+        from a newer planner revision) is diagnosable from the error alone.
+        """
         bad = sorted({k for row in self.kind for k in row
                       if k not in EXECUTABLE_TICK_KINDS})
         if bad:
+            def name(k):
+                n = TICK_NAMES.get(k)
+                return f"{k} ({n})" if n else str(k)
             raise NotImplementedError(
-                f"tick table for schedule {self.schedule!r} contains "
-                f"non-executable tick kinds {bad} (zero-bubble dgrad/wgrad "
-                f"split is a planned follow-up); executable schedules: "
-                f"{', '.join(EXECUTABLE_SCHEDULES)}")
+                f"tick table for schedule {self.schedule!r} contains tick "
+                f"kinds {[name(k) for k in bad]} this executor cannot "
+                f"interpret; executable kinds are "
+                f"{dict((k, TICK_NAMES[k]) for k in EXECUTABLE_TICK_KINDS)} "
+                f"(kinds 3/4 = the dgrad/wgrad halves emitted by "
+                f"build_tick_table(split_backward=True)).  A plan JSON with "
+                f"other kinds comes from a different planner revision — "
+                f"re-emit the plan with this repo's planner.")
+        if self.is_split:
+            # a malformed split table (e.g. hand-edited JSON) must fail here,
+            # not as silent garbage gradients in the executor
+            self.residual_slots()
+
+    @property
+    def is_split(self) -> bool:
+        """True when the table carries zero-bubble dgrad/wgrad ticks."""
+        return any(k in (TICK_BDGRAD, TICK_BWGRAD)
+                   for row in self.kind for k in row)
+
+    def residual_slots(self) -> tuple[list, int]:
+        """Ring-buffer slot assignment for the dgrad→wgrad residuals.
+
+        A BDGRAD tick saves its (activation, cotangent) residual into a
+        per-stage slot; the matching BWGRAD tick replays from that slot and
+        frees it.  Slots are assigned by free-list so the buffer is bounded
+        by the maximum number of dgrads outstanding at once (the table's max
+        dgrad→wgrad distance in units, not ticks), NOT by V*M.
+
+        Returns ``(slot, depth)``: ``slot`` a [T][S] int table (0 for
+        non-split ticks) and ``depth`` the ring-buffer bound R the executor
+        sizes its residual buffers with.  Raises ValueError on inconsistent
+        pairing — a wgrad with no strictly-earlier dgrad, or a dgrad whose
+        wgrad never runs (the strict ready rules of the split scheduler).
+        """
+        S = self.n_stages
+        slot = [[0] * S for _ in range(self.n_ticks)]
+        depth = 0
+        free: list[list[int]] = [[] for _ in range(S)]
+        n_alloc = [0] * S
+        held: list[dict] = [{} for _ in range(S)]
+        for t in range(self.n_ticks):
+            for s in range(S):
+                k = self.kind[t][s]
+                key = (self.unit_v[t][s], self.unit_mb[t][s])
+                if k == TICK_BDGRAD:
+                    if key in held[s]:
+                        raise ValueError(
+                            f"split tick table: duplicate BDGRAD for chunk "
+                            f"v={key[0]} mb={key[1]} on stage {s} (tick {t})")
+                    sl = free[s].pop() if free[s] else n_alloc[s]
+                    if sl == n_alloc[s]:
+                        n_alloc[s] += 1
+                        depth = max(depth, n_alloc[s])
+                    held[s][key] = (sl, t)
+                    slot[t][s] = sl
+                elif k == TICK_BWGRAD:
+                    if key not in held[s]:
+                        raise ValueError(
+                            f"split tick table: BWGRAD for chunk v={key[0]} "
+                            f"mb={key[1]} on stage {s} (tick {t}) has no "
+                            f"earlier BDGRAD — not a "
+                            f"build_tick_table(split_backward=True) table")
+                    sl, t_bd = held[s].pop(key)
+                    if t_bd >= t:
+                        raise ValueError(
+                            f"split tick table: BWGRAD at tick {t} not "
+                            f"strictly after its BDGRAD (tick {t_bd}) on "
+                            f"stage {s}")
+                    slot[t][s] = sl
+                    free[s].append(sl)
+        leftover = [(s, key) for s in range(S) for key in held[s]]
+        if leftover:
+            raise ValueError(
+                f"split tick table: {len(leftover)} BDGRAD tick(s) whose "
+                f"BWGRAD half never runs (first: stage {leftover[0][0]}, "
+                f"(v, mb)={leftover[0][1]}) — the weight gradient would be "
+                f"silently dropped")
+        return slot, max(depth, 1)
+
+    def residual_depth(self) -> int:
+        """The executor's residual ring-buffer bound R (1 for unsplit)."""
+        return self.residual_slots()[1]
 
     def gather_segments(self) -> list:
         """Partition of [0, T) at ZeRO weight-gather boundaries: a list of
@@ -386,14 +491,12 @@ class TickTable:
         the lockstep rendering the segmented executor measurement
         (obs/trace.measure_tick_timeline) also produces, so the two align
         directly in ``obs/drift.drift_report``."""
-        names = {TICK_F: "F", TICK_B: "B", TICK_BDGRAD: "Bd",
-                 TICK_BWGRAD: "Bw"}
         out = []
         for t, row in enumerate(self.kind):
             for s, k in enumerate(row):
                 if k == TICK_IDLE:
                     continue
-                out.append((s, names[k], self.unit_v[t][s],
+                out.append((s, TICK_NAMES[k], self.unit_v[t][s],
                             self.unit_mb[t][s], float(t), float(t + 1)))
         return out
 
@@ -482,10 +585,16 @@ def build_tick_table(sim: SimConfig, *, split_backward: bool = False
       B(g, mb)       B(g+1, mb) ran at an earlier tick (dx arrived over the
                      backward ring)
 
-    ``split_backward=True`` emits the zero-bubble stub: B ticks become
-    BDGRAD in place and the weight-gradient halves (BWGRAD) are appended as
-    a tail — structurally a tick table, but rejected by
-    ``TickTable.validate_executable`` until the executor learns the split.
+    ``split_backward=True`` is the zero-bubble split (ZB-H1-style greedy):
+    every B unit becomes a BDGRAD tick in place, and its deferred BWGRAD
+    half fills the first later tick its stage would otherwise idle — the
+    warmup/cooldown bubble slots of 1f1b/interleaved — with leftovers
+    drained as a tail.  The extended ready rules stay strict: a BWGRAD may
+    run only at a tick strictly after its BDGRAD (which saved the residual),
+    never displaces a ready head-of-line unit, and every BDGRAD's wgrad
+    half must eventually run (``TickTable.residual_slots`` re-checks all
+    three on any table).  ``DeadlockError`` still fires if no stage can
+    progress on head-of-line units or pending wgrads.
     """
     assert sim.include_backward, "tick tables describe full grad passes"
     S, M, V = sim.n_stages, sim.n_microbatches, sim.n_chunks
@@ -493,60 +602,55 @@ def build_tick_table(sim: SimConfig, *, split_backward: bool = False
     orders = [deque(stage_order(sim, s)) for s in range(S)]
     f_done: dict[tuple[int, int], int] = {}
     b_done: dict[tuple[int, int], int] = {}
+    # per-stage deferred wgrad halves, oldest first: (v, mb, dgrad_tick)
+    pend_w: list[deque] = [deque() for _ in range(S)]
     kind, unit_v, unit_mb = [], [], []
     t = 0
-    while any(orders):
+    while any(orders) or any(pend_w):
         row_k, row_v, row_mb = [TICK_IDLE] * S, [0] * S, [0] * S
         progressed = False
         for s in range(S):
-            if not orders[s]:
-                continue
-            knd, v, mb = orders[s][0]
-            g = v * S + s
-            if knd == "F":
-                ok = g == 0 or f_done.get((g - 1, mb), t) < t
-            elif g == n_g - 1:
-                ok = f_done.get((g, mb), t) < t
-            else:
-                ok = b_done.get((g + 1, mb), t) < t
-            if not ok:
-                continue
-            orders[s].popleft()
-            progressed = True
-            row_v[s], row_mb[s] = v, mb
-            if knd == "F":
-                row_k[s] = TICK_F
-                f_done[(g, mb)] = t
-            else:
-                row_k[s] = TICK_B
-                b_done[(g, mb)] = t
+            ok = False
+            if orders[s]:
+                knd, v, mb = orders[s][0]
+                g = v * S + s
+                if knd == "F":
+                    ok = g == 0 or f_done.get((g - 1, mb), t) < t
+                elif g == n_g - 1:
+                    ok = f_done.get((g, mb), t) < t
+                else:
+                    ok = b_done.get((g + 1, mb), t) < t
+            if ok:
+                orders[s].popleft()
+                progressed = True
+                row_v[s], row_mb[s] = v, mb
+                if knd == "F":
+                    row_k[s] = TICK_F
+                    f_done[(g, mb)] = t
+                elif split_backward:
+                    row_k[s] = TICK_BDGRAD
+                    b_done[(g, mb)] = t
+                    pend_w[s].append((v, mb, t))
+                else:
+                    row_k[s] = TICK_B
+                    b_done[(g, mb)] = t
+            elif pend_w[s] and pend_w[s][0][2] < t:
+                # bubble slot: run the oldest deferred wgrad (its residual
+                # was saved by a strictly-earlier BDGRAD tick)
+                v, mb, _ = pend_w[s].popleft()
+                progressed = True
+                row_k[s], row_v[s], row_mb[s] = TICK_BWGRAD, v, mb
         if not progressed:
             stuck = {s: orders[s][0] for s in range(S) if orders[s]}
+            pend = {s: list(pend_w[s]) for s in range(S) if pend_w[s]}
             raise DeadlockError(
-                f"tick table for {sim.schedule} deadlocked at tick {t}; "
-                f"heads: {stuck}")
+                f"tick table for {sim.schedule} "
+                f"(split_backward={split_backward}) deadlocked at tick {t}; "
+                f"heads: {stuck}; pending wgrads: {pend}")
         kind.append(row_k)
         unit_v.append(row_v)
         unit_mb.append(row_mb)
         t += 1
-    if split_backward:
-        wgrad = [[], [], []]
-        for tr_k, tr_v, tr_mb in zip(kind, unit_v, unit_mb):
-            pend_k, pend_v, pend_mb = [TICK_IDLE] * S, [0] * S, [0] * S
-            any_b = False
-            for s in range(S):
-                if tr_k[s] == TICK_B:
-                    tr_k[s] = TICK_BDGRAD
-                    pend_k[s], pend_v[s], pend_mb[s] = \
-                        TICK_BWGRAD, tr_v[s], tr_mb[s]
-                    any_b = True
-            if any_b:
-                wgrad[0].append(pend_k)
-                wgrad[1].append(pend_v)
-                wgrad[2].append(pend_mb)
-        kind += wgrad[0]
-        unit_v += wgrad[1]
-        unit_mb += wgrad[2]
     return _finish_table(sim.schedule, S, V, sim.layers_per_chunk, M,
                          kind, unit_v, unit_mb)
 
@@ -591,6 +695,9 @@ def simulate(sim: SimConfig, cost: CostModel, *,
 
     t_f = k_c * cost.t_fwd_layer
     t_b = k_c * cost.t_bwd_layer
+    split = sim.split_backward and sim.include_backward
+    t_bw = WGRAD_FRACTION * t_b if split else 0.0
+    t_bd = t_b - t_bw               # dgrad: recompute + activation transposes
     t_p2p = (cost.act_bytes / cost.p2p_bw
              if S > 1 and cost.p2p_bw > 0 else 0.0)
     n = sim.n_data
@@ -684,6 +791,10 @@ def simulate(sim: SimConfig, cost: CostModel, *,
     peak_live = [0] * S
     timeline: list | None = [] if record_timeline else None
     pending_gather_charge: dict[tuple, bool] = {}
+    # split-backward state: deferred wgrad halves (v, mb, dgrad_end) and the
+    # compute-engine busy intervals the gap-filling pass slots them into
+    pending_w: list[list] = [[] for _ in range(S)]
+    busy_iv: list[list] = [[] for _ in range(S)]
 
     def gather_gate(kind: str, s: int, v: int, mb: int) -> float:
         """Ready-time contribution of the ZeRO weight gather for a unit."""
@@ -699,7 +810,9 @@ def simulate(sim: SimConfig, cost: CostModel, *,
         key = (kind, s, v) if sim.method == "layered" else (kind, s, v, mb)
         if key not in pending_gather_charge:
             pending_gather_charge[key] = True
-            stage_free[s] = max(stage_free[s], 0.0) + t_gather
+            g0 = max(stage_free[s], 0.0)
+            stage_free[s] = g0 + t_gather
+            busy_iv[s].append((g0, stage_free[s]))
             n_gathers += 1
             coll_bytes_total += gather_bytes
             coll_s_total += t_gather
@@ -734,6 +847,29 @@ def simulate(sim: SimConfig, cost: CostModel, *,
         opt_free[s] = start + t_opt_chunk
         opt_s_total += t_opt_chunk
         n_opt += 1
+
+    def finish_b_unit(s: int, v: int, end: float) -> None:
+        """Gradient-reduction + fused-update placement once a chunk's
+        backward unit is COMPLETE (at B end when unsplit, at the deferred
+        wgrad's end when split — the reduce-per-chunk frequency is identical
+        either way)."""
+        remaining_b_chunk[(s, v)] -= 1
+        remaining_b_stage[s] -= 1
+        chunk_done = remaining_b_chunk[(s, v)] == 0
+        if sim.partitioned:
+            if sim.method == "layered":
+                if chunk_done:
+                    issue_reduce(s, end, scatter_bytes, t_scatter)
+            else:
+                issue_reduce(s, end, scatter_bytes, t_scatter)
+        else:
+            if sim.method == "layered":
+                if chunk_done:
+                    issue_reduce(s, end, psum_bytes, t_psum)
+            elif remaining_b_stage[s] == 0:
+                issue_reduce(s, end, V * psum_bytes, V * t_psum)
+        if chunk_done and opt_per_chunk:
+            charge_opt_fused(s, end)
 
     def ready(s: int, unit: tuple[str, int, int]) -> bool:
         kind, v, mb = unit
@@ -787,9 +923,12 @@ def simulate(sim: SimConfig, cost: CostModel, *,
         else:
             start = max(stage_free[s], f_end[(g, mb)],
                         arrive_c[(g, mb)], gate)
-            end = start + t_b
+            # split: the dgrad half alone sits on the cotangent critical
+            # path; the wgrad half is deferred into a later idle gap
+            dur = t_bd if split else t_b
+            end = start + dur
             stage_free[s] = end
-            busy[s] += t_b
+            busy[s] += dur
             live[s] -= 1
             if g > 0:
                 if S > 1:
@@ -804,27 +943,15 @@ def simulate(sim: SimConfig, cost: CostModel, *,
                 else:
                     done = end
                 arrive_c[(g - 1, mb)] = done
-            # gradient reduction placement
-            remaining_b_chunk[(s, v)] -= 1
-            remaining_b_stage[s] -= 1
-            chunk_done = remaining_b_chunk[(s, v)] == 0
-            if sim.partitioned:
-                if sim.method == "layered":
-                    if chunk_done:
-                        issue_reduce(s, end, scatter_bytes, t_scatter)
-                else:
-                    issue_reduce(s, end, scatter_bytes, t_scatter)
+            if split:
+                pending_w[s].append((v, mb, end))
             else:
-                if sim.method == "layered":
-                    if chunk_done:
-                        issue_reduce(s, end, psum_bytes, t_psum)
-                elif remaining_b_stage[s] == 0:
-                    issue_reduce(s, end, V * psum_bytes, V * t_psum)
-            if chunk_done and opt_per_chunk:
-                charge_opt_fused(s, end)
+                finish_b_unit(s, v, end)
         last_event = max(last_event, stage_free[s])
+        busy_iv[s].append((start, stage_free[s]))
         if timeline is not None:
-            timeline.append((s, kind, v, mb, round(start, 9), round(end, 9)))
+            tk = "Bd" if (split and kind != "F") else kind
+            timeline.append((s, tk, v, mb, round(start, 9), round(end, 9)))
 
     # --- head-of-line scheduling loop ------------------------------------
     work = deque(range(S))
@@ -849,6 +976,41 @@ def simulate(sim: SimConfig, cost: CostModel, *,
             f"schedule deadlocked with {n_units_total - n_scheduled} units "
             f"pending; heads: {stuck}")
 
+    # split backward: slot every deferred wgrad into its stage's earliest
+    # compute-engine idle gap at/after its dgrad finished (leftovers append
+    # at the stage's end).  Wgrads have no downstream consumers, so this
+    # post-hoc placement cannot perturb the forward/dgrad event times above;
+    # chunk-gradient reduces + fused updates fire at the wgrad that
+    # completes each chunk, same per-chunk frequency as the unsplit path.
+    n_wgrad = 0
+    if split:
+        for s in range(S):
+            gaps = []
+            cur = 0.0
+            for (a, b) in sorted(busy_iv[s]):
+                if a > cur:
+                    gaps.append((cur, a))
+                cur = max(cur, b)
+            gaps.append((cur, float("inf")))
+            i = 0
+            for (v, mb, w_ready) in pending_w[s]:
+                while True:
+                    gs, ge = gaps[i]
+                    w0 = max(gs, w_ready)
+                    if ge - w0 >= t_bw:
+                        break
+                    i += 1
+                gaps[i] = (w0 + t_bw, ge)
+                w1 = w0 + t_bw
+                busy[s] += t_bw
+                n_wgrad += 1
+                stage_free[s] = max(stage_free[s], w1)
+                last_event = max(last_event, w1)
+                finish_b_unit(s, v, w1)
+                if timeline is not None:
+                    timeline.append((s, "Bw", v, mb,
+                                     round(w0, 9), round(w1, 9)))
+
     # non-layered methods: one bulk update tail per stage once all of its
     # chunk gradients are reduced (pass count still set by fused_optimizer).
     if (t_opt_chunk > 0 and not opt_per_chunk
@@ -871,6 +1033,7 @@ def simulate(sim: SimConfig, cost: CostModel, *,
         coll_s=coll_s_total, coll_bytes=coll_bytes_total,
         counts={"fwd_units": V * M * S, "bwd_units": V * M * S
                 if sim.include_backward else 0,
+                "wgrad_units": n_wgrad,
                 "fwd_sends": fwd_sends, "bwd_sends": bwd_sends,
                 "gathers": n_gathers, "reduces": n_reduces,
                 "opt_updates": n_opt},
@@ -906,12 +1069,19 @@ def predict_spmd_composition(spec, cost: CostModel, *,
     ``extra_coll_bytes`` carries the non-permute wire bytes (the end-of-step
     stage psum completing the stage-replicated outer-leaf gradients).
     Compare against ``roofline.analyze`` on the lowered grad fn.
+
+    Zero-bubble split tables price by the SAME per-tick bundle — every tick
+    still runs the one masked joint VJP and three permutes, whether it is a
+    full B, a dgrad, or a wgrad tick — so only the tick count ``T`` differs
+    between a split and an unsplit schedule here.
     """
     if table is None:
+        split = bool(getattr(spec, "split_backward", False))
         table = build_tick_table(SimConfig(
             n_stages=spec.n_stages, layers_per_stage=spec.layers_per_stage,
             n_microbatches=spec.n_microbatches, schedule=spec.schedule,
-            n_chunks=getattr(spec, "n_chunks", 0) or 0))
+            n_chunks=getattr(spec, "n_chunks", 0) or 0,
+            split_backward=split), split_backward=split)
     T_ = table.n_ticks
     k_c = table.layers_per_chunk
     flops = T_ * (3.0 * k_c * cost.flops_fwd_layer + 3.0 * head_flops)

@@ -107,6 +107,31 @@ def test_partitioned_collectives_match_tick_table(sched):
     assert meas == pytest.approx(pred), (sched, meas, pred)
 
 
+@pytest.mark.parametrize("sched", ["1f1b", "interleaved"])
+def test_split_partitioned_collectives_match_tick_table(sched):
+    """Zero-bubble split tables keep the per-tick collective contract: three
+    stage permutes per tick (the table just has more ticks) and STILL one
+    data-axis gather + one scatter per (layer leaf, chunk) — the wgrad ticks
+    accumulate into the same chunk grads, they must not re-gather or add a
+    second reduce-scatter."""
+    spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                    schedule=sched, split_backward=True)
+    table = spec.tick_table()
+    assert table.is_split
+    meas, n_leaves = _measured_collectives(spec, partitioned=True)
+    pred = table.predicted_collectives(partitioned=True,
+                                       n_layer_leaves=n_leaves)
+    assert meas == pytest.approx(pred), (sched, meas, pred)
+    # the split strictly adds ticks, and the pin is against the SPLIT count
+    unsplit = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                       schedule=sched).tick_table()
+    assert table.n_ticks > unsplit.n_ticks
+    assert pred["ppermute_stage"] == 3 * table.n_ticks
+    assert pred["all_gather_data"] == \
+        unsplit.predicted_collectives(
+            partitioned=True, n_layer_leaves=n_leaves)["all_gather_data"]
+
+
 @pytest.mark.parametrize("sched", EXECUTABLE + ("gpipe",))
 @pytest.mark.parametrize("S,K,M", [(2, 2, 4), (4, 2, 8), (2, 4, 2)])
 def test_tick_table_covers_all_work(sched, S, K, M):

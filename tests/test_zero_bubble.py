@@ -1,0 +1,348 @@
+"""Zero-bubble backward split (tick kinds 3/4, ISSUE 10 tentpole).
+
+``build_tick_table(split_backward=True)`` replaces every backward tick with
+a dgrad tick (kind 3: releases the upstream cotangent) plus a deferred
+wgrad tick (kind 4: weight-path dots replayed from the residual ring
+buffer, scheduled into bubble slots).  The split must change ONLY the
+schedule shape: grads and losses match the unsplit executor bit-for-bit at
+fp32, the simulated bubble fraction strictly drops, and malformed split
+tables die with legible errors.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.pipeline import (from_stage_stack, make_pipeline_grad_fn,
+                                 make_partitioned_pipeline_grad_fn,
+                                 partitioned_stage_param_specs,
+                                 stage_param_specs, to_partitioned_stage_stack,
+                                 to_stage_stack)
+from repro.core.schedules import PipeSpec
+from repro.models import transformer as T
+from repro.models.common import AxisCtx, ModelConfig
+from repro.planner import simulator as simlib
+
+CFG = ModelConfig(name="zb", arch_type="dense", num_layers=4, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", param_dtype="float32")
+M = 4
+SPLITTABLE = ("1f1b", "interleaved", "modular", "gpipe")
+
+
+# ---------------------------------------------------------------------------
+# Pure-table invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sched", SPLITTABLE)
+@pytest.mark.parametrize("S,K,Mb", [(2, 2, 4), (4, 2, 8)])
+def test_split_table_covers_all_work(sched, S, K, Mb):
+    """Every (chunk, micro-batch) runs F once, Bd once, and Bw once with
+    Bw strictly after its Bd; the table validates as executable."""
+    try:
+        spec = PipeSpec(n_stages=S, layers_per_stage=K, n_microbatches=Mb,
+                        schedule=sched, split_backward=True)
+    except AssertionError:
+        pytest.skip(f"{sched} infeasible at S={S} K={K} M={Mb}")
+    table = spec.tick_table()
+    assert table.is_split
+    table.validate_executable()          # must not raise
+    n_g = table.n_chunks * S
+    f_done, bd_done, bw_done = {}, {}, {}
+    for t in range(table.n_ticks):
+        for s in range(S):
+            kind = table.kind[t][s]
+            if kind == simlib.TICK_IDLE:
+                continue
+            assert kind != simlib.TICK_B, "split table must not emit full B"
+            g = table.unit_v[t][s] * S + s
+            mb = table.unit_mb[t][s]
+            if kind == simlib.TICK_F:
+                assert (g, mb) not in f_done
+                f_done[(g, mb)] = t
+            elif kind == simlib.TICK_BDGRAD:
+                assert (g, mb) not in bd_done
+                assert f_done[(g, mb)] < t
+                bd_done[(g, mb)] = t
+            else:
+                assert kind == simlib.TICK_BWGRAD
+                assert (g, mb) not in bw_done
+                assert bd_done[(g, mb)] < t   # wgrad strictly after its dgrad
+                bw_done[(g, mb)] = t
+    assert len(f_done) == len(bd_done) == len(bw_done) == n_g * Mb
+    # the residual ring is bounded and every slot index respects the bound
+    slots, depth = table.residual_slots()
+    assert 1 <= depth <= table.n_chunks * Mb
+    for t in range(table.n_ticks):
+        for s in range(S):
+            assert 0 <= slots[t][s] < depth
+
+
+def test_split_table_json_roundtrip_and_names():
+    """Satellite: JSON round-trip preserves kinds 3/4 and the shared timeline
+    schema names them Bd / Bw."""
+    spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                    schedule="1f1b", split_backward=True)
+    table = spec.tick_table()
+    back = simlib.TickTable.from_json(json.loads(json.dumps(table.to_json())))
+    assert back.is_split
+    assert back.kind == table.kind
+    assert back.residual_slots() == table.residual_slots()
+    assert back.predicted_collectives(partitioned=True) == \
+        table.predicted_collectives(partitioned=True)
+    kinds = {k for (_, k, _, _, _, _) in table.timeline()}
+    assert kinds == {"F", "Bd", "Bw"}
+    assert simlib.TICK_NAMES[simlib.TICK_BDGRAD] == "Bd"
+    assert simlib.TICK_NAMES[simlib.TICK_BWGRAD] == "Bw"
+
+
+def test_validate_names_unknown_kinds():
+    """Satellite bugfix: the rejection names the offending kinds and the
+    planner flag that produces kinds 3/4."""
+    doc = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                   schedule="1f1b").tick_table().to_json()
+    doc["kind"][0][0] = 7
+    bad = simlib.TickTable.from_json(doc)
+    with pytest.raises(NotImplementedError) as ei:
+        bad.validate_executable()
+    msg = str(ei.value)
+    assert "7" in msg
+    assert "split_backward=True" in msg
+
+
+def test_malformed_split_pairing_rejected():
+    """A split table whose wgrad half is missing (or precedes its dgrad)
+    fails validation with a message naming the broken unit."""
+    doc = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                   schedule="1f1b", split_backward=True).tick_table().to_json()
+    # drop every wgrad: the weight gradient would silently vanish
+    dropped = dict(doc, kind=[[0 if k == simlib.TICK_BWGRAD else k
+                               for k in row] for row in doc["kind"]])
+    with pytest.raises(ValueError, match="never runs"):
+        simlib.TickTable.from_json(dropped).validate_executable()
+    # swap every dgrad <-> wgrad: each wgrad now precedes its dgrad
+    swap = {simlib.TICK_BDGRAD: simlib.TICK_BWGRAD,
+            simlib.TICK_BWGRAD: simlib.TICK_BDGRAD}
+    swapped = dict(doc, kind=[[swap.get(k, k) for k in row]
+                              for row in doc["kind"]])
+    with pytest.raises(ValueError):
+        simlib.TickTable.from_json(swapped).validate_executable()
+
+
+# ---------------------------------------------------------------------------
+# Simulated headline: the bubble strictly drops
+# ---------------------------------------------------------------------------
+_COST = simlib.CostModel(
+    flops_fwd_layer=1.0, flops_bwd_layer=3.0, act_bytes=0.0,
+    layer_param_bytes=0.0, layer_grad_bytes=0.0, flops_rate=1.0,
+    p2p_bw=1.0, coll_bw=1.0)
+
+
+@pytest.mark.parametrize("sched,V", [("1f1b", 0), ("interleaved", 2),
+                                     ("gpipe", 0), ("modular", 0)])
+def test_simulated_bubble_strictly_drops(sched, V):
+    """Acceptance headline: splitting the backward strictly shrinks the
+    simulated bubble fraction (wgrads fill cooldown gaps) without changing
+    reduction frequency, and never slows the step."""
+    res = {}
+    for split in (False, True):
+        sim = simlib.SimConfig(
+            n_stages=4, layers_per_stage=2, n_microbatches=8,
+            schedule=sched, n_chunks=V, split_backward=split,
+            partitioned=True, n_data=2)
+        res[split] = simlib.simulate(sim, _COST)
+    assert res[True].bubble_fraction < res[False].bubble_fraction, (
+        sched, res[True].bubble_fraction, res[False].bubble_fraction)
+    assert res[True].step_time <= res[False].step_time + 1e-9
+    # the split moves work, it must not change reduction frequency
+    assert res[True].counts["reduces"] == res[False].counts["reduces"]
+    assert res[True].counts["opt_updates"] == res[False].counts["opt_updates"]
+    # every backward unit produced exactly one deferred wgrad
+    assert res[True].counts["wgrad_units"] == res[True].counts["bwd_units"]
+    assert res[False].counts["wgrad_units"] == 0
+
+
+def test_split_timeline_renders_wgrad_lane():
+    sim = simlib.SimConfig(n_stages=2, layers_per_stage=2, n_microbatches=4,
+                           schedule="1f1b", split_backward=True)
+    res = simlib.simulate(sim, _COST, record_timeline=True)
+    kinds = {k for (_, k, *_rest) in res.timeline}
+    assert "Bd" in kinds and "Bw" in kinds and "B" not in kinds
+
+
+# ---------------------------------------------------------------------------
+# Executor parity: the split changes the schedule, not the math
+# ---------------------------------------------------------------------------
+def _grads_for(spec, mesh, axis, params, batch, *, partitioned, tp=1):
+    bspecs = {k: P(None, "data", None) for k in batch}
+    if partitioned:
+        lspecs = T.layer_specs(CFG, tp) if tp > 1 else None
+        tmpl = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+            params["layers"])
+        pparams = dict(
+            {k: v for k, v in params.items() if k != "layers"},
+            layers=to_partitioned_stage_stack(params["layers"], spec,
+                                              axis.ndata, lspecs=lspecs,
+                                              tp=tp)
+            if tp > 1 else to_partitioned_stage_stack(params["layers"], spec,
+                                                      axis.ndata))
+        specs = partitioned_stage_param_specs(CFG, tp)
+        grad_fn = make_partitioned_pipeline_grad_fn(CFG, axis, spec, tmpl)
+    else:
+        pparams = dict({k: v for k, v in params.items() if k != "layers"},
+                       layers=to_stage_stack(params["layers"], spec))
+        specs = stage_param_specs(CFG, tp)
+        grad_fn = make_pipeline_grad_fn(CFG, axis, spec)
+    fn = compat.shard_map(grad_fn, mesh=mesh, in_specs=(specs, bspecs),
+                          out_specs=(specs, {"loss": P(), "ntok": P()}))
+    return jax.jit(fn)(pparams, batch)
+
+
+@pytest.mark.parametrize("sched", ["1f1b", "interleaved"])
+def test_split_grad_parity_replicated(sched):
+    """Split vs unsplit on replicated storage (stage x data mesh): identical
+    loss and grads at fp32 1e-5."""
+    mesh = compat.make_mesh((2, 2), ("stage", "data"))
+    axis = AxisCtx(data="data", dp=2, ndata=2)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(CFG, key)
+    toks = jax.random.randint(key, (M, 4, 16), 0, 64)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1),
+             "mask": jnp.ones_like(toks)}
+    got = {}
+    for split in (False, True):
+        spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                        schedule=sched, split_backward=split)
+        got[split] = _grads_for(spec, mesh, axis, params, batch,
+                                partitioned=False)
+    (g0, m0), (g1, m1) = got[False], got[True]
+    np.testing.assert_allclose(float(m1["loss"]), float(m0["loss"]),
+                               rtol=1e-6)
+    for (pa, ga), (_, gb) in zip(jax.tree_util.tree_leaves_with_path(g1),
+                                 jax.tree_util.tree_leaves_with_path(g0)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{sched} {pa}")
+
+
+@pytest.mark.parametrize("sched", ["1f1b", "interleaved"])
+def test_split_grad_parity_partitioned_3d(sched):
+    """Split vs unsplit on ZeRO-partitioned storage over the full
+    stage x data x model mesh (tp=2): identical loss and chunk grads at
+    fp32 1e-5 — the wgrad ticks accumulate into the same chunk gradients
+    the reduce-scatter consumes once per chunk per pass."""
+    mesh = compat.make_mesh((2, 2, 2), ("stage", "data", "model"))
+    axis = AxisCtx(data="data", model="model", tp=2, dp=2, ndata=2)
+    key = jax.random.PRNGKey(7)
+    params = T.init_params(CFG, key)
+    toks = jax.random.randint(key, (M, 4, 16), 0, 64)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1),
+             "mask": jnp.ones_like(toks)}
+    got = {}
+    for split in (False, True):
+        spec = PipeSpec(n_stages=2, layers_per_stage=2, n_microbatches=M,
+                        schedule=sched, split_backward=split)
+        got[split] = _grads_for(spec, mesh, axis, params, batch,
+                                partitioned=True, tp=2)
+    (g0, m0), (g1, m1) = got[False], got[True]
+    np.testing.assert_allclose(float(m1["loss"]), float(m0["loss"]),
+                               rtol=1e-6)
+    for (pa, ga), (_, gb) in zip(jax.tree_util.tree_leaves_with_path(g1),
+                                 jax.tree_util.tree_leaves_with_path(g0)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{sched} {pa}")
+
+
+# ---------------------------------------------------------------------------
+# Launch plumbing: an embedded split table executes through --plan
+# ---------------------------------------------------------------------------
+def test_split_plan_trajectory_through_train(tmp_path):
+    """Acceptance e2e: a plan embedding a split 1f1b table runs through
+    ``launch.train --plan`` with per-step loss AND grad-norm trajectory
+    parity (>= 4 steps) against the same plan unsplit."""
+    from repro.launch import train as train_cli
+
+    runs = {}
+    for split in (False, True):
+        table = PipeSpec(n_stages=2, layers_per_stage=1, n_microbatches=2,
+                         schedule="1f1b", split_backward=split).tick_table()
+        plan = {
+            "version": 1, "kind": "execution",
+            "execution": {
+                "arch": "gemma-2b", "smoke": True, "mesh": "2x1",
+                "method": "layered", "partitioned": True, "microbatches": 2,
+                "global_batch": 4, "seq_len": 32, "steps": 4,
+                "stages": 2, "schedule": "1f1b", "split_backward": split,
+                "tick_table": table.to_json(),
+            },
+        }
+        p = tmp_path / f"plan_{split}.json"
+        p.write_text(json.dumps(plan))
+        metrics = tmp_path / f"metrics_{split}.jsonl"
+        train_cli.main(["--plan", str(p), "--metrics", str(metrics)])
+        recs = [json.loads(l) for l in metrics.read_text().splitlines()]
+        steps = [r for r in recs if r.get("event") == "step" and "loss" in r]
+        runs[split] = ([r["loss"] for r in steps],
+                       [r["grad_norm"] for r in steps])
+    (l0, g0), (l1, g1) = runs[False], runs[True]
+    assert len(l1) >= 4
+    assert all(math.isfinite(l) for l in l1)
+    np.testing.assert_allclose(l1, l0, rtol=1e-5)
+    np.testing.assert_allclose(g1, g0, rtol=1e-5)
+
+
+def test_train_rejects_corrupt_split_table(tmp_path, capsys):
+    """launch.train fail-fast: a stale plan with a malformed split pairing
+    dies before tracing, with the diagnosis in the error."""
+    from repro.launch import train as train_cli
+
+    doc = PipeSpec(n_stages=2, layers_per_stage=1, n_microbatches=2,
+                   schedule="1f1b", split_backward=True).tick_table().to_json()
+    doc["kind"] = [[0 if k == simlib.TICK_BWGRAD else k for k in row]
+                   for row in doc["kind"]]
+    plan = {
+        "version": 1, "kind": "execution",
+        "execution": {
+            "arch": "gemma-2b", "smoke": True, "mesh": "2x1",
+            "method": "layered", "partitioned": True, "microbatches": 2,
+            "global_batch": 4, "seq_len": 16, "steps": 1,
+            "stages": 2, "schedule": "1f1b", "split_backward": True,
+            "tick_table": doc,
+        },
+    }
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan))
+    with pytest.raises(SystemExit):
+        train_cli.main(["--plan", str(p)])
+    err = capsys.readouterr().err
+    assert "never runs" in err, err
+
+
+# ---------------------------------------------------------------------------
+# Planner ranking exposes the knob
+# ---------------------------------------------------------------------------
+def test_smoke_plan_ranks_split_candidates():
+    from repro.planner import plan as planlib
+
+    doc = planlib.smoke_plan_document(
+        "gemma-2b", devices=4, global_batch=8, stage_options=(2,),
+        microbatch_options=(4,))
+    split_rows = [r for r in doc["plans"] if r["split_backward"]]
+    unsplit = [r for r in doc["plans"] if not r["split_backward"]]
+    assert split_rows and unsplit
+    # split tables run more ticks of the same per-tick bundle
+    by = {(r["schedule"], r["partitioned"], r["mesh"]): r for r in unsplit}
+    for r in split_rows:
+        mate = by[(r["schedule"], r["partitioned"], r["mesh"])]
+        assert r["n_ticks"] > mate["n_ticks"]
+    ex = doc["execution"]
+    assert "split_backward" in ex
+    tab = simlib.TickTable.from_json(ex["tick_table"])
+    assert tab.is_split == ex["split_backward"]
+    tab.validate_executable()

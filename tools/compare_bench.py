@@ -58,6 +58,14 @@ KEY_METRICS: dict[str, dict[str, str]] = {
     "BENCH_pipeline": {
         # ZeRO-partitioned step time relative to replicated (same-run ratio)
         "partitioned_over_replicated_step": "lower",
+        # zero-bubble headline: simulated 1f1b bubble with the backward
+        # split into dgrad + deferred wgrad (strictly below the unsplit
+        # bubble, which stays as a warn-only companion metric)
+        "zb_bubble_fraction": "lower",
+        # executed split/unsplit step-time ratio on the lockstep executor:
+        # same per-tick bundle over more ticks, so near 1 — a jump means
+        # the split path grew per-tick work (residual buffer gone wrong)
+        "zb_step_ratio": "lower",
     },
     "BENCH_resilience": {
         # killed-and-resumed trajectory must match the clean run
